@@ -1,0 +1,69 @@
+"""Fig 9 + headline: DAISM accelerator cycles vs on-chip area vs Eyeriss
+executing VGG-8 layer 1 (bfloat16, PC3_tr), across bank configurations.
+"""
+from __future__ import annotations
+
+import time
+
+from repro.core import Variant
+from repro.core import arch_model as A
+
+
+def run():
+    layer = A.ConvLayer()  # VGG-8 L1: 224x224x3, 3x3x3x64
+    rows = []
+    t0 = time.perf_counter()
+    ey = A.eyeriss_cycles(layer)
+    ey_area = A.eyeriss_area_mm2()
+    ey_energy = A.eyeriss_layer_energy_uj(layer)
+    rows.append({"name": "arch_eyeriss", "us_per_call": 0.0,
+                 "cycles": int(ey["cycles"]), "area_mm2": round(ey_area, 2),
+                 "energy_uj": round(ey_energy, 1), "pe": 168})
+    for bc in A.FIG9_CONFIGS:
+        d = A.daism_cycles(layer, bc, Variant.PC3_TR)
+        rows.append({
+            "name": f"arch_daism_{bc.num_banks}x{bc.bank_kbytes}kB",
+            "us_per_call": 0.0,
+            "cycles": int(d["cycles"]),
+            "area_mm2": round(A.daism_area_mm2(bc), 2),
+            "energy_uj": round(A.daism_layer_energy_uj(layer, bc), 1),
+            "pe": int(d["pe_equivalent"]),
+            "utilization": d["utilization"],
+        })
+    dt_us = (time.perf_counter() - t0) * 1e6 / len(rows)
+    for r in rows:
+        r["us_per_call"] = round(dt_us, 2)
+
+    by = {r["name"]: r for r in rows}
+    d16x32 = by["arch_daism_16x32kB"]
+    d16x8 = by["arch_daism_16x8kB"]
+    d4x128 = by["arch_daism_4x128kB"]
+    d1x512 = by["arch_daism_1x512kB"]
+    eyr = by["arch_eyeriss"]
+    claims = {
+        # Fig 9 geometry
+        "single_bank_slowest": d1x512["cycles"] > max(
+            d4x128["cycles"], d16x32["cycles"], d16x8["cycles"]),
+        "16x32_has_512_pe": d16x32["pe"] == 512,
+        "16x8_matches_4x128_cycles": d16x8["cycles"] == d4x128["cycles"],
+        "16x8_smallest_area": d16x8["area_mm2"] < min(
+            d4x128["area_mm2"], d16x32["area_mm2"], d1x512["area_mm2"],
+            eyr["area_mm2"]),
+        "banked_beats_eyeriss_cycles": d16x32["cycles"] < eyr["cycles"],
+        # headline claims (paper: -25% energy, -43% cycles at similar area;
+        # our constants give the numbers below — reported, not asserted ==)
+        "headline_cycle_reduction_pct_16x8": round(
+            (eyr["cycles"] - d16x8["cycles"]) / eyr["cycles"] * 100, 1),
+        "headline_cycle_reduction_pct_16x32": round(
+            (eyr["cycles"] - d16x32["cycles"]) / eyr["cycles"] * 100, 1),
+        "headline_energy_reduction_pct": round(
+            (eyr["energy_uj"] - d16x32["energy_uj"]) / eyr["energy_uj"] * 100, 1),
+    }
+    return rows, claims
+
+
+if __name__ == "__main__":
+    rows, claims = run()
+    for r in rows:
+        print(r)
+    print(claims)

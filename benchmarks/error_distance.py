@@ -1,0 +1,58 @@
+"""Fig 5/6: error distance of INT8 approximate multiplication.
+
+Exhaustive sweep over all 256x256 INT8 operand pairs (the paper's fractal
+plot data) for FLA/HLA (Fig 5) and PC2/PC3 (Fig 6), plus the float-mantissa
+operating region (both MSBs set) the paper argues PC2/PC3 favor.
+"""
+from __future__ import annotations
+
+import time
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import Variant, error_distance
+from repro.core.multiplier import approx_mul_uint
+
+
+def run():
+    rows = []
+    a = jnp.arange(256, dtype=jnp.int32)[:, None]
+    b = jnp.arange(256, dtype=jnp.int32)[None, :]
+    exact = a * b
+    # mantissa operating region (MSB always set — float mode, paper §3.4)
+    hi = slice(128, 256)
+    for v in (Variant.FLA, Variant.HLA, Variant.PC2, Variant.PC3):
+        t0 = time.perf_counter()
+        approx = approx_mul_uint(a, b, 8, v)
+        ed = np.asarray(error_distance(exact, approx))
+        dt = (time.perf_counter() - t0) * 1e6
+        approx_f = approx_mul_uint(a, b, 8, v, msb_always_set=True)
+        ed_f = np.asarray(error_distance(exact, approx_f))[hi, hi]
+        rows.append({
+            "name": f"error_distance_{v.value}",
+            "us_per_call": round(dt, 1),
+            "mean_ed": round(float(ed.mean()), 5),
+            "max_ed": round(float(ed.max()), 5),
+            "mean_ed_mantissa_region": round(float(ed_f.mean()), 5),
+            "max_ed_mantissa_region": round(float(ed_f.max()), 5),
+        })
+    # paper claims: HLA < FLA error; PC3 < PC2 < FLA in mantissa region
+    byname = {r["name"].split("_")[-1]: r for r in rows}
+    claims = {
+        "hla_better_than_fla": byname["hla"]["mean_ed"] < byname["fla"]["mean_ed"],
+        "pc3_best_mantissa": (byname["pc3"]["mean_ed_mantissa_region"]
+                              < byname["pc2"]["mean_ed_mantissa_region"]
+                              < byname["fla"]["mean_ed_mantissa_region"]),
+        "exact_when_no_collisions": float(np.asarray(error_distance(
+            jnp.int32(64) * b[0], approx_mul_uint(
+                jnp.full((256,), 64, jnp.int32), b[0], 8, Variant.FLA))).max()) == 0.0,
+    }
+    return rows, claims
+
+
+if __name__ == "__main__":
+    rows, claims = run()
+    for r in rows:
+        print(r)
+    print(claims)

@@ -1,0 +1,69 @@
+"""DAISM GEMM micro-bench: backends (jnp / LUT / Pallas-interpret) across
+shapes, CPU wall time + derived TPU-roofline estimates for the kernel.
+
+Wall times on this CPU container measure *relative* backend overheads; the
+derived column estimates the TPU v5e VPU-bound time for the DAISM kernel
+(8 shift/OR int32 steps per MAC on the VPU at ~4 Top/s int32) vs the exact
+MXU matmul (197 TFLOP/s) — quantifying the honest deployment trade-off
+documented in DESIGN.md §2.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import Backend, DaismConfig, Variant, daism_matmul
+
+VPU_INT32_OPS = 4e12     # ~per chip
+MXU_FLOPS = 197e12
+DAISM_OPS_PER_MAC = 30   # decompose + 8x(select/or/shift) + normalize + compose
+
+
+def _time(fn, *args, iters=3):
+    fn(*args).block_until_ready()  # compile
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = fn(*args)
+    out.block_until_ready()
+    return (time.perf_counter() - t0) / iters * 1e6
+
+
+def run():
+    rows = []
+    rng = np.random.default_rng(0)
+    shapes = [(128, 512, 512), (256, 1024, 512)]
+    for (m, k, n) in shapes:
+        a = jnp.asarray(rng.normal(size=(m, k)), jnp.bfloat16)
+        w = jnp.asarray(rng.normal(size=(k, n)), jnp.bfloat16)
+        macs = m * k * n
+        tpu_daism_us = macs * DAISM_OPS_PER_MAC / VPU_INT32_OPS * 1e6
+        tpu_exact_us = 2 * macs / MXU_FLOPS * 1e6
+        for backend in (Backend.EXACT, Backend.JNP, Backend.LUT,
+                        Backend.PALLAS):
+            variant = Variant.EXACT if backend is Backend.EXACT \
+                else Variant.PC3_TR
+            cfg = DaismConfig(variant=variant, backend=backend)
+            fn = jax.jit(lambda a, w, c=cfg: daism_matmul(a, w, c))
+            us = _time(fn, a, w)
+            rows.append({
+                "name": f"gemm_{m}x{k}x{n}_{backend.value}",
+                "us_per_call": round(us, 1),
+                "derived_tpu_us": round(
+                    tpu_exact_us if backend is Backend.EXACT
+                    else tpu_daism_us, 2),
+            })
+    claims = {
+        "daism_tpu_slowdown_vs_mxu": round(
+            DAISM_OPS_PER_MAC / VPU_INT32_OPS / (2 / MXU_FLOPS), 1),
+    }
+    return rows, claims
+
+
+if __name__ == "__main__":
+    rows, claims = run()
+    for r in rows:
+        print(r)
+    print(claims)

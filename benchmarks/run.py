@@ -1,0 +1,47 @@
+"""Benchmark harness: one module per paper table/figure (DESIGN.md section 6).
+
+Prints ``name,us_per_call,derived`` CSV rows plus per-benchmark claim
+checks, and writes results/benchmarks.json. The dry-run/roofline tables
+(EXPERIMENTS.md Dry-run/Roofline) come from ``repro.launch.dryrun``,
+which needs the 512-device environment and is run separately.
+"""
+from __future__ import annotations
+
+import json
+import os
+import sys
+import time
+
+_MODULES = ("error_distance", "energy", "arch_cycles", "gemm_bench",
+            "accuracy")
+
+
+def main() -> None:
+    only = sys.argv[1:] or _MODULES
+    all_rows, all_claims = [], {}
+    for name in only:
+        mod = __import__(f"benchmarks.{name}", fromlist=["run"])
+        t0 = time.perf_counter()
+        rows, claims = mod.run()
+        dt = time.perf_counter() - t0
+        print(f"# {name} ({dt:.1f}s)", flush=True)
+        for r in rows:
+            derived = {k: v for k, v in r.items()
+                       if k not in ("name", "us_per_call")}
+            print(f"{r['name']},{r['us_per_call']},{json.dumps(derived)}",
+                  flush=True)
+        for k, v in claims.items():
+            print(f"claim,{name}.{k},{v}", flush=True)
+        all_rows += rows
+        all_claims.update({f"{name}.{k}": v for k, v in claims.items()})
+    os.makedirs("results", exist_ok=True)
+    with open("results/benchmarks.json", "w") as f:
+        json.dump({"rows": all_rows, "claims": all_claims}, f, indent=1,
+                  default=str)
+    failed = [k for k, v in all_claims.items() if v is False]
+    print(f"# claims: {sum(1 for v in all_claims.values() if v is True)} "
+          f"hold, {len(failed)} failed: {failed}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,86 @@
+"""Assigned-architecture configs + the paper's own models.
+
+Every module exposes ``CONFIG`` (exact assigned numbers) and the registry
+maps ``--arch <id>`` to it. ``input_specs(cfg, shape_name)`` builds the
+ShapeDtypeStruct stand-ins for the dry-run (no allocation).
+"""
+from __future__ import annotations
+
+import importlib
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import ArchConfig
+
+ARCH_IDS = (
+    "tinyllama_1_1b",
+    "gemma_2b",
+    "starcoder2_15b",
+    "nemotron_4_340b",
+    "dbrx_132b",
+    "qwen3_moe_235b",
+    "llama_3_2_vision_11b",
+    "xlstm_1_3b",
+    "whisper_large_v3",
+    "zamba2_1_2b",
+)
+
+PAPER_IDS = ("lenet5", "vgg16", "vgg8")
+
+_ALIAS = {i.replace("_", "-"): i for i in ARCH_IDS + PAPER_IDS}
+
+
+def get_config(arch: str) -> ArchConfig:
+    arch = _ALIAS.get(arch, arch)
+    mod = importlib.import_module(f"repro.configs.{arch}")
+    return mod.CONFIG
+
+
+# ---------------------------------------------------------------------------
+# Assigned input shapes (LM shapes are seq_len x global_batch)
+# ---------------------------------------------------------------------------
+
+SHAPES: Dict[str, Tuple[int, int, str]] = {
+    # name: (seq_len, global_batch, kind)
+    "train_4k": (4_096, 256, "train"),
+    "prefill_32k": (32_768, 32, "prefill"),
+    "decode_32k": (32_768, 128, "decode"),
+    "long_500k": (524_288, 1, "decode"),
+}
+
+# Mandated skips (DESIGN.md §4): long_500k only for SSM/hybrid.
+_LONG_OK_FAMILIES = ("ssm", "hybrid")
+
+
+def cell_enabled(cfg: ArchConfig, shape_name: str) -> bool:
+    if shape_name == "long_500k":
+        return cfg.family in _LONG_OK_FAMILIES
+    return True
+
+
+def input_specs(cfg: ArchConfig, shape_name: str):
+    """ShapeDtypeStruct stand-ins for every model input of a dry-run cell.
+
+    Returns (batch_dict, kind). Decode kinds also need the cache, built
+    abstractly by the model's ``init_cache(..., abstract=True)``.
+    """
+    seq, batch, kind = SHAPES[shape_name]
+    i32 = jnp.int32
+    specs = {}
+    if kind in ("train", "prefill"):
+        specs["tokens"] = jax.ShapeDtypeStruct((batch, seq), i32)
+        if kind == "train":
+            specs["labels"] = jax.ShapeDtypeStruct((batch, seq), i32)
+    else:  # decode: one new token against a cache of length seq
+        specs["tokens"] = jax.ShapeDtypeStruct((batch, 1), i32)
+    if cfg.family == "vlm":
+        specs["image_embeds"] = jax.ShapeDtypeStruct(
+            (batch, cfg.n_image_tokens, cfg.d_model),
+            jnp.dtype(cfg.compute_dtype))
+    if cfg.family == "audio":
+        specs["frames"] = jax.ShapeDtypeStruct(
+            (batch, cfg.enc_frames, cfg.d_model),
+            jnp.dtype(cfg.compute_dtype))
+    return specs, kind

@@ -1,0 +1,180 @@
+"""Bit-level primitives for the DAISM multiplier family.
+
+TPU adaptation note (DESIGN.md §2): the paper's partial-product space for a
+float32 mantissa multiply is 48 bits wide. TPUs have no 64-bit integer lanes,
+so we represent 2n-bit words (n = mantissa width) as a **dual plane**
+``(hi, lo)`` of int32 values, each holding ``n`` bits
+(``value = hi * 2**n + lo``). Because the wired-OR reduction is carry-free,
+OR-accumulation never crosses the plane boundary — the dual-plane form is a
+*lossless* reformulation, and the few exact adds the variants need (HLA's
+second read, the pre-computed head lines) carry at most one bit across, which
+we propagate explicitly.
+
+All functions are pure jnp and shape-polymorphic (operate elementwise on
+broadcastable int32 arrays).
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax.numpy as jnp
+from jax import lax
+
+Planes = Tuple[jnp.ndarray, jnp.ndarray]  # (hi, lo), each int32 holding n bits
+
+
+def _mask(n: int) -> int:
+    return (1 << n) - 1
+
+
+# ---------------------------------------------------------------------------
+# Dual-plane algebra (value = hi * 2**n + lo, 0 <= hi, lo < 2**n, n <= 24)
+# ---------------------------------------------------------------------------
+
+def planes_from_shift(a: jnp.ndarray, i: int, n: int) -> Planes:
+    """Return ``a << i`` as dual planes, for 0 <= a < 2**n, 0 <= i < n.
+
+    Never overflows int32: the low plane keeps only the bits of ``a`` that
+    stay below the boundary, the high plane gets the spill.
+    """
+    if i == 0:
+        return jnp.zeros_like(a), a
+    lo = (a & _mask(n - i)) << i
+    hi = a >> (n - i)
+    return hi, lo
+
+
+def planes_or(x: Planes, y: Planes) -> Planes:
+    return x[0] | y[0], x[1] | y[1]
+
+
+def planes_select(pred: jnp.ndarray, x: Planes, zero_like: jnp.ndarray) -> Planes:
+    z = jnp.zeros_like(zero_like)
+    return jnp.where(pred, x[0], z), jnp.where(pred, x[1], z)
+
+
+def planes_add(x: Planes, y: Planes, n: int) -> Planes:
+    """Exact add of two dual-plane values (carry propagates across planes)."""
+    lo = x[1] + y[1]
+    carry = lo >> n
+    return x[0] + y[0] + carry, lo & _mask(n)
+
+
+def planes_from_scaled(a_times_w: jnp.ndarray, shift: int, n: int) -> Planes:
+    """Planes of ``a_times_w << shift`` where ``a_times_w`` fits int32.
+
+    Used for the pre-computed head lines: ``(A+B) = 3a << (n-2)`` etc.
+    ``a_times_w`` may be up to 7 * (2**n - 1) (< 2**27 for n=24): safe.
+    """
+    lo = (a_times_w & _mask(max(n - shift, 0))) << shift if shift < n else jnp.zeros_like(a_times_w)
+    hi = a_times_w >> (n - shift) if shift < n else (a_times_w << (shift - n))
+    return hi & 0x7FFFFFFF, lo
+
+
+def planes_truncate_top(x: Planes, n: int) -> Planes:
+    """Keep only the top-n columns (bits 2n-1 .. n) => zero the low plane."""
+    return x[0], jnp.zeros_like(x[1])
+
+
+def planes_to_float(x: Planes, n: int) -> jnp.ndarray:
+    """Exact float64-free conversion to f32 (value < 2**48 loses low bits in
+    f32; used for error analysis at n<=12 and for diagnostics only)."""
+    return x[0].astype(jnp.float32) * float(1 << n) + x[1].astype(jnp.float32)
+
+
+def exact_mul_planes(a: jnp.ndarray, b: jnp.ndarray, n: int) -> Planes:
+    """Exact 2n-bit product of n-bit unsigned a, b as dual planes (int32-only).
+
+    Splits each operand into 12-bit halves so every partial product fits in
+    int32 (max 2**24 * 7). Valid for n <= 24.
+    """
+    if n > 24:
+        raise ValueError("dual-plane exact multiply supports n <= 24")
+    h = 12
+    al, ah = a & _mask(h), a >> h
+    bl, bh = b & _mask(h), b >> h
+    low = al * bl                    # < 2**24
+    mid = ah * bl + al * bh          # < 2**25
+    high = ah * bh                   # < 2**24
+    # value = high*2**24 + mid*2**12 + low ; re-bucket into n-bit planes.
+    lo_acc = low + ((mid & _mask(h)) << h)           # < 2**25
+    hi_acc = high + (mid >> h) + (lo_acc >> 24)      # carries from bit 24
+    lo24 = lo_acc & _mask(24)
+    # Now value = hi_acc * 2**24 + lo24. Re-split to n-bit planes.
+    if n == 24:
+        return hi_acc, lo24
+    # n < 24: value < 2**(2n) <= 2**46 ; hi plane = value >> n.
+    hi = (hi_acc << (24 - n)) | (lo24 >> n)
+    lo = lo24 & _mask(n)
+    return hi, lo
+
+
+# ---------------------------------------------------------------------------
+# Float (de)composition. uint arithmetic is done in int32 after widening.
+# ---------------------------------------------------------------------------
+
+def decompose_bf16(x: jnp.ndarray):
+    """bf16 -> (sign, biased_exp, mantissa_with_implicit_1) int32 each.
+
+    Subnormals are flushed (treated as zero): exp==0 => mantissa 0.
+    """
+    bits = lax.bitcast_convert_type(x, jnp.uint16).astype(jnp.int32)
+    sign = bits >> 15
+    exp = (bits >> 7) & 0xFF
+    frac = bits & 0x7F
+    man = jnp.where(exp > 0, frac | 0x80, 0)
+    return sign, exp, man
+
+
+def compose_bf16(sign: jnp.ndarray, exp: jnp.ndarray, man: jnp.ndarray) -> jnp.ndarray:
+    """(sign, biased_exp, 8-bit mantissa incl. leading 1) -> bf16.
+
+    exp <= 0 flushes to zero; exp >= 255 saturates to inf. man==0 => zero.
+    """
+    zero = (man == 0) | (exp <= 0)
+    inf = exp >= 255
+    exp_c = jnp.clip(exp, 0, 254)
+    bits = (sign << 15) | (exp_c << 7) | (man & 0x7F)
+    bits = jnp.where(zero, sign << 15, bits)
+    bits = jnp.where(inf & ~zero, (sign << 15) | (0xFF << 7), bits)
+    return lax.bitcast_convert_type(bits.astype(jnp.uint16), jnp.bfloat16)
+
+
+def decompose_f32(x: jnp.ndarray):
+    """f32 -> (sign, biased_exp, 24-bit mantissa incl. leading 1) int32."""
+    bits = lax.bitcast_convert_type(x, jnp.uint32)
+    sign = (bits >> 31).astype(jnp.int32)
+    exp = ((bits >> 23) & jnp.uint32(0xFF)).astype(jnp.int32)
+    frac = (bits & jnp.uint32(0x7FFFFF)).astype(jnp.int32)
+    man = jnp.where(exp > 0, frac | (1 << 23), 0)
+    return sign, exp, man
+
+
+def compose_f32(sign: jnp.ndarray, exp: jnp.ndarray, man: jnp.ndarray) -> jnp.ndarray:
+    zero = (man == 0) | (exp <= 0)
+    inf = exp >= 255
+    exp_c = jnp.clip(exp, 0, 254)
+    bits = (
+        (sign.astype(jnp.uint32) << 31)
+        | (exp_c.astype(jnp.uint32) << 23)
+        | (man & 0x7FFFFF).astype(jnp.uint32)
+    )
+    bits = jnp.where(zero, sign.astype(jnp.uint32) << 31, bits)
+    bits = jnp.where(inf & ~zero, (sign.astype(jnp.uint32) << 31) | jnp.uint32(0x7F800000), bits)
+    return lax.bitcast_convert_type(bits, jnp.float32)
+
+
+def decompose(x: jnp.ndarray):
+    if x.dtype == jnp.bfloat16:
+        return decompose_bf16(x)
+    if x.dtype == jnp.float32:
+        return decompose_f32(x)
+    raise ValueError(f"unsupported dtype {x.dtype}")
+
+
+def compose(sign, exp, man, dtype):
+    if jnp.dtype(dtype) == jnp.bfloat16:
+        return compose_bf16(sign, exp, man)
+    if jnp.dtype(dtype) == jnp.float32:
+        return compose_f32(sign, exp, man)
+    raise ValueError(f"unsupported dtype {dtype}")

@@ -1,0 +1,82 @@
+"""Approximate floating-point multiply built on the DAISM mantissa multiplier.
+
+Paper §3.4: only the mantissa product is approximated. The implicit leading 1
+is made explicit (so the ``A`` line is always active — the favorable PC2/PC3
+operating region), exponents are added exactly, signs are XOR'd, and the
+result is renormalized by a single top-bit test (the approximate product is
+bounded by ``A <= p~ <= a*b`` so its leading bit is at position 2n-1 or 2n-2).
+
+Convention: ``w`` is the multiplicand (kernel element, stored pre-shifted in
+SRAM), ``x`` is the multiplier (input, drives wordline activation). FLA is
+operand-symmetric; HLA/PC2/PC3 are not, so the convention matters and follows
+the paper ("the multiplicand would be a kernel element and the multiplier
+would be the input").
+
+Products are returned as float32 for exact downstream accumulation (the DAISM
+accumulator is exact, paper §4.1). For bfloat16 inputs the <=16-bit product
+mantissa is represented exactly in f32. For float32 inputs with untruncated
+variants the 48-bit product is rounded toward zero to 24 bits on conversion
+(|err| < 2^-23 relative — orders of magnitude below the OR-approximation
+error; the paper's own *baseline* [43] truncates to 24 bits as well).
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from . import bitops
+from .config import Variant, mantissa_bits
+from .multiplier import approx_mul_uint, approx_mul_uint_planes
+
+_BIAS = 127  # bf16 and f32 share the 8-bit exponent / bias-127 format
+
+
+def _normalize_single(prod: jnp.ndarray, n: int):
+    """(product in [2^(2n-2), 2^2n)) -> (n-bit mantissa, exp bump)."""
+    top = (prod >> (2 * n - 1)) & 1
+    man = jnp.where(top == 1, prod >> n, prod >> (n - 1))
+    return man & ((1 << n) - 1), top
+
+
+def _normalize_planes(hi: jnp.ndarray, lo: jnp.ndarray, n: int):
+    top = (hi >> (n - 1)) & 1
+    man_hi = hi  # bits 2n-1..n
+    man_lo = ((hi << 1) | (lo >> (n - 1))) & ((1 << n) - 1)  # bits 2n-2..n-1
+    man = jnp.where(top == 1, man_hi, man_lo)
+    return man & ((1 << n) - 1), top
+
+
+def approx_mul_to_f32(x: jnp.ndarray, w: jnp.ndarray, variant: Variant) -> jnp.ndarray:
+    """Elementwise approximate product of broadcastable x (input/multiplier)
+    and w (weight/multiplicand), returned as float32."""
+    variant = Variant(variant)
+    if variant is Variant.EXACT:
+        return x.astype(jnp.float32) * w.astype(jnp.float32)
+    if x.dtype != w.dtype:
+        raise ValueError(f"operand dtypes must match, got {x.dtype} vs {w.dtype}")
+    n = mantissa_bits(x.dtype)
+
+    sx, ex, mx = bitops.decompose(x)
+    sw, ew, mw = bitops.decompose(w)
+    sx, ex, mx, sw, ew, mw = jnp.broadcast_arrays(sx, ex, mx, sw, ew, mw)
+
+    if n <= 15:
+        prod = approx_mul_uint(mw, mx, n, variant, msb_always_set=True)
+        man, bump = _normalize_single(prod, n)
+    else:
+        hi, lo = approx_mul_uint_planes(mw, mx, n, variant, msb_always_set=True)
+        man, bump = _normalize_planes(hi, lo, n)
+
+    sign = sx ^ sw
+    exp = ex + ew - _BIAS + bump
+    # Map the n-bit mantissa (incl. leading 1) into an f32 mantissa.
+    man_f32 = man << (24 - n)
+    zero = (mx == 0) | (mw == 0)
+    exp = jnp.where(zero, 0, exp)
+    man_f32 = jnp.where(zero, 0, man_f32)
+    return bitops.compose_f32(sign, exp, man_f32)
+
+
+def approx_mul(x: jnp.ndarray, w: jnp.ndarray, variant: Variant) -> jnp.ndarray:
+    """Elementwise approximate product, returned in the input dtype."""
+    out = approx_mul_to_f32(x, w, Variant(variant))
+    return out.astype(x.dtype)

@@ -1,0 +1,10 @@
+"""Pallas TPU kernels for DAISM's compute hot spot (the approximate GEMM).
+
+daism_matmul.py - pl.pallas_call + BlockSpec VMEM tiling (bf16)
+ops.py          - jit'd wrappers (padding, dispatch, interpret auto-detect)
+ref.py          - pure-jnp oracles the kernels are validated against
+"""
+from .ops import daism_matmul_pallas
+from .ref import daism_matmul_ref
+
+__all__ = ["daism_matmul_pallas", "daism_matmul_ref"]

@@ -1,0 +1,131 @@
+"""Flash attention Pallas kernel (beyond-paper §Perf optimization).
+
+The dry-run roofline shows every attention-bearing cell is MEMORY-bound, and
+the dominant traffic is the materialized (B, H, Sq, Skv-chunk) score/weight
+tensors of the jnp online-softmax path (EXPERIMENTS.md §Perf: tinyllama
+train_4k memory term 5.81 s vs 0.22 s compute). This kernel keeps scores in
+VMEM: HBM traffic collapses to q+k+v+o (+small m/l), removing the score
+tensors entirely.
+
+Tiling: grid (B*H, Sq/bq, Skv/bk), KV innermost with the (m, l, acc)
+accumulator resident across the KV sweep. Causal masking by absolute
+position; fully-masked tiles still execute (structural simplicity; the
+index-map skip is a further 2x — noted in §Perf).
+
+Validated in interpret mode against models.layers.attend (the production
+online-softmax) and a naive softmax oracle in tests/test_flash_attention.py.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+
+
+def _kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
+            scale: float, causal: bool, bq: int, bk: int, kv_steps: int):
+    kv_i = pl.program_id(2)
+
+    @pl.when(kv_i == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, -jnp.inf)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[0].astype(jnp.float32) * scale          # (bq, d)
+    k = k_ref[0].astype(jnp.float32)                  # (bk, d)
+    v = v_ref[0].astype(jnp.float32)
+    s = jnp.dot(q, k.T)                               # (bq, bk) in VMEM only
+
+    if causal:
+        q_pos = pl.program_id(1) * bq + jax.lax.broadcasted_iota(
+            jnp.int32, (bq, bk), 0)
+        k_pos = kv_i * bk + jax.lax.broadcasted_iota(
+            jnp.int32, (bq, bk), 1)
+        s = jnp.where(k_pos <= q_pos, s, -1e30)
+
+    m_prev, l_prev, acc_prev = m_ref[...], l_ref[...], acc_ref[...]
+    m_new = jnp.maximum(m_prev, s.max(-1))
+    corr = jnp.exp(m_prev - m_new)
+    p = jnp.exp(s - m_new[:, None])
+    l_new = l_prev * corr + p.sum(-1)
+    acc_new = acc_prev * corr[:, None] + jnp.dot(p, v)
+    m_ref[...], l_ref[...], acc_ref[...] = m_new, l_new, acc_new
+
+    @pl.when(kv_i == kv_steps - 1)
+    def _finalize():
+        o_ref[0] = (acc_new / jnp.maximum(l_new, 1e-30)[:, None]
+                    ).astype(o_ref.dtype)
+
+
+def flash_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *,
+                    causal: bool = True, block_q: int = 128,
+                    block_k: int = 128, interpret: bool = True
+                    ) -> jnp.ndarray:
+    """q: (BH, Sq, D), k/v: (BH, Skv, D) -> (BH, Sq, D).
+
+    Sq % block_q == Skv % block_k == 0 (wrapper pads). Scores never touch
+    HBM: per-step working set = q,k,v tiles + (bq, bk) scores + (bq, D) acc
+    ~= (3*128*D + 128*128 + 128*D)*4 B — < 1 MiB at D=128, VMEM-resident.
+    """
+    bh, sq, d = q.shape
+    skv = k.shape[1]
+    assert sq % block_q == 0 and skv % block_k == 0
+    grid = (bh, sq // block_q, skv // block_k)
+    kernel = functools.partial(
+        _kernel, scale=1.0 / np.sqrt(d), causal=causal, bq=block_q,
+        bk=block_k, kv_steps=grid[2])
+    out, _, _, _ = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, block_q, d), lambda b, i, j: (b, i, 0)),
+            pl.BlockSpec((1, block_k, d), lambda b, i, j: (b, j, 0)),
+            pl.BlockSpec((1, block_k, d), lambda b, i, j: (b, j, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, block_q, d), lambda b, i, j: (b, i, 0)),
+            pl.BlockSpec((block_q,), lambda b, i, j: (i,)),
+            pl.BlockSpec((block_q,), lambda b, i, j: (i,)),
+            pl.BlockSpec((block_q, d), lambda b, i, j: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((bh, sq, d), q.dtype),
+            jax.ShapeDtypeStruct((sq,), jnp.float32),       # m scratch
+            jax.ShapeDtypeStruct((sq,), jnp.float32),       # l scratch
+            jax.ShapeDtypeStruct((sq, d), jnp.float32),     # acc scratch
+        ],
+        interpret=interpret,
+    )(q, k, v)
+    return out
+
+
+def flash_attention_bhsd(q, k, v, *, causal=True, interpret=True,
+                         block_q=128, block_k=128):
+    """(B, S, H, D) layout wrapper with GQA head repeat + padding."""
+    b, sq, h, d = q.shape
+    skv, kh = k.shape[1], k.shape[2]
+    if kh != h:
+        rep = h // kh
+        k = jnp.repeat(k, rep, axis=2)
+        v = jnp.repeat(v, rep, axis=2)
+    qt = q.transpose(0, 2, 1, 3).reshape(b * h, sq, d)
+    kt = k.transpose(0, 2, 1, 3).reshape(b * h, skv, d)
+    vt = v.transpose(0, 2, 1, 3).reshape(b * h, skv, d)
+    pq = (-sq) % block_q
+    pk = (-skv) % block_k
+    if pq:
+        qt = jnp.pad(qt, ((0, 0), (0, pq), (0, 0)))
+    if pk:  # padded keys land at positions > any query: masked by causal;
+        # for non-causal, pad with -inf via explicit mask is needed — the
+        # wrapper only supports causal padding (asserted).
+        assert causal, "non-causal padding unsupported in wrapper"
+        kt = jnp.pad(kt, ((0, 0), (0, pk), (0, 0)))
+        vt = jnp.pad(vt, ((0, 0), (0, pk), (0, 0)))
+    out = flash_attention(qt, kt, vt, causal=causal, block_q=block_q,
+                          block_k=block_k, interpret=interpret)
+    out = out[:, :sq].reshape(b, h, sq, d).transpose(0, 2, 1, 3)
+    return out

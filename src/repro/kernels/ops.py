@@ -1,0 +1,46 @@
+"""jit'd public wrappers around the Pallas kernels (padding + dispatch)."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.config import DaismConfig, Variant
+
+from .daism_matmul import daism_matmul_kernel
+
+
+def _round_up(x: int, m: int) -> int:
+    return (x + m - 1) // m * m
+
+
+def _auto_interpret(cfg: DaismConfig) -> bool:
+    if cfg.interpret is not None:
+        return cfg.interpret
+    return jax.default_backend() == "cpu"
+
+
+@functools.partial(jax.jit, static_argnums=(2,))
+def daism_matmul_pallas(a: jnp.ndarray, w: jnp.ndarray, cfg: DaismConfig) -> jnp.ndarray:
+    """(M, K) @ (K, N) -> (M, N) f32 with automatic pad-to-tile.
+
+    Zero padding is semantics-preserving: approx(0 * w) == 0 contributes
+    nothing to the exact accumulation.
+    """
+    if a.dtype != jnp.bfloat16 or w.dtype != jnp.bfloat16:
+        raise ValueError("Pallas DAISM kernel is bfloat16-only; f32 uses the "
+                         "dual-plane jnp backend")
+    m, k = a.shape
+    _, n = w.shape
+    bm, bk, bn = cfg.block_m, cfg.block_k, cfg.block_n
+    mp, kp, np_ = _round_up(m, bm), _round_up(k, bk), _round_up(n, bn)
+    a_p = jnp.pad(a, ((0, mp - m), (0, kp - k))) if (mp, kp) != (m, k) else a
+    w_p = jnp.pad(w, ((0, kp - k), (0, np_ - n))) if (kp, np_) != (k, n) else w
+    out = daism_matmul_kernel(
+        a_p, w_p,
+        variant=cfg.variant,
+        block_m=bm, block_n=bn, block_k=bk,
+        interpret=_auto_interpret(cfg),
+    )
+    return out[:m, :n]

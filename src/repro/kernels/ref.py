@@ -1,0 +1,22 @@
+"""Pure-jnp oracles for the Pallas kernels.
+
+``daism_matmul_ref`` is the normative semantics: exact f32 accumulation of
+per-element approximate products from ``core.floatmul`` (which is itself
+validated against numpy bit-level oracles in tests/). Kernel outputs must be
+bit-exact against this for every variant/shape/dtype swept in tests.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.core.config import Variant
+from repro.core.floatmul import approx_mul_to_f32
+
+
+def daism_matmul_ref(a: jnp.ndarray, w: jnp.ndarray, variant: Variant) -> jnp.ndarray:
+    """(M, K) @ (K, N) -> (M, N) f32. Materializes (M, K, N); test-scale only."""
+    variant = Variant(variant)
+    if variant is Variant.EXACT:
+        return jnp.matmul(a.astype(jnp.float32), w.astype(jnp.float32))
+    prod = approx_mul_to_f32(a[:, :, None], w[None, :, :], variant)
+    return prod.sum(axis=1)

@@ -1,0 +1,37 @@
+"""Production mesh construction.
+
+``make_production_mesh`` is a FUNCTION (not a module-level constant) so
+importing this module never touches jax device state — required because the
+dry-run must set XLA_FLAGS *before* the first jax device query, while smoke
+tests must keep seeing 1 device.
+"""
+from __future__ import annotations
+
+from typing import Optional, Sequence, Tuple
+
+import jax
+import numpy as np
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """16x16 single-pod (256 chips) or 2x16x16 multi-pod (512 chips)."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_mesh(shape: Sequence[int], axes: Sequence[str]):
+    """Arbitrary mesh (tests / elastic re-mesh use this)."""
+    return jax.make_mesh(tuple(shape), tuple(axes))
+
+
+def best_effort_mesh(model_parallel: int = 1):
+    """Elastic helper: build the largest (data, model) mesh the *currently
+    alive* devices support. Used by the fault-tolerant driver when restarting
+    after losing hosts: model_parallel is fixed by the checkpoint layout, the
+    data axis absorbs whatever is left."""
+    n = jax.device_count()
+    if n % model_parallel != 0:
+        raise ValueError(f"{n} devices not divisible by TP={model_parallel}")
+    return jax.make_mesh((n // model_parallel, model_parallel),
+                         ("data", "model"))

@@ -1,0 +1,73 @@
+"""Serving launcher: batched prefill + greedy decode with KV cache.
+
+    PYTHONPATH=src python -m repro.launch.serve --arch tinyllama_1_1b \
+        --smoke --batch 4 --prompt-len 16 --gen 16
+
+Demonstrates the production serve path: one prefill forward per request
+batch, then serve_step (decode_step) per generated token against the cache.
+"""
+import argparse
+import os
+
+
+def main(argv=None):
+    p = argparse.ArgumentParser()
+    p.add_argument("--arch", required=True)
+    p.add_argument("--smoke", action="store_true")
+    p.add_argument("--batch", type=int, default=4)
+    p.add_argument("--prompt-len", type=int, default=16)
+    p.add_argument("--gen", type=int, default=16)
+    p.add_argument("--devices", type=int, default=0)
+    args = p.parse_args(argv)
+    if args.devices:
+        os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "") +
+                                   f" --xla_force_host_platform_device_count={args.devices}")
+    import time
+
+    import jax
+    import jax.numpy as jnp
+
+    from repro.configs import get_config
+    from repro.models.registry import build_model
+
+    cfg = get_config(args.arch)
+    if args.smoke:
+        cfg = cfg.smoke()
+    model = build_model(cfg)
+    params, _ = model.init(jax.random.PRNGKey(0))
+    rng = jax.random.PRNGKey(1)
+    prompts = jax.random.randint(rng, (args.batch, args.prompt_len), 0,
+                                 cfg.vocab)
+
+    max_seq = args.prompt_len + args.gen
+    cache = model.init_cache(args.batch, max_seq)
+    decode = jax.jit(model.decode_step)
+
+    # prefill by stepping the prompt through the cache (uniform code path;
+    # a chunked prefill kernel is the production optimization, see §Perf)
+    t0 = time.perf_counter()
+    tok = prompts[:, :1]
+    for t in range(args.prompt_len):
+        logits, cache = decode(params, prompts[:, t:t + 1], cache)
+    prefill_s = time.perf_counter() - t0
+
+    out_tokens = []
+    t0 = time.perf_counter()
+    tok = jnp.argmax(logits[:, -1], -1)[:, None]
+    for _ in range(args.gen):
+        out_tokens.append(tok)
+        logits, cache = decode(params, tok, cache)
+        tok = jnp.argmax(logits[:, -1], -1)[:, None]
+    jax.block_until_ready(tok)
+    decode_s = time.perf_counter() - t0
+
+    gen = jnp.concatenate(out_tokens, axis=1)
+    print(f"prompts {prompts.shape} -> generated {gen.shape}")
+    print(f"prefill {prefill_s*1e3:.1f} ms, decode "
+          f"{decode_s / args.gen * 1e3:.2f} ms/token "
+          f"({args.batch * args.gen / decode_s:.1f} tok/s)")
+    print("sample:", gen[0].tolist())
+
+
+if __name__ == "__main__":
+    main()

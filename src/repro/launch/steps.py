@@ -1,0 +1,193 @@
+"""Builders for the distributed train / prefill / decode steps.
+
+``build_artifacts`` assembles, for one (arch x mesh) pair: the model, the
+sharder (logical-axis rules), abstract param/optimizer/cache trees, their
+NamedShardings, and jit-compiled step functions with explicit in/out
+shardings and donated buffers. The dry-run lowers these exact functions; the
+trainer executes them — one code path for both (no fake dry-run graph).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.models.common import ArchConfig
+from repro.models.module import axes_tree
+from repro.models.registry import build_model, lm_loss
+from repro.optim import (AdamWConfig, AdamWState, abstract_state,
+                         apply_updates, cosine_with_warmup, init_state,
+                         state_axes)
+from repro.parallel.sharding import (Sharder, base_rules, tree_shardings,
+                                     use_sharder)
+
+
+# ---------------------------------------------------------------------------
+# Cache logical axes (keyed by leaf name + rank — uniform across model zoo)
+# ---------------------------------------------------------------------------
+
+_CACHE_AXES = {
+    ("k", 5): ("layers", "cache_batch", "cache_seq", "act_kv_heads", None),
+    ("v", 5): ("layers", "cache_batch", "cache_seq", "act_kv_heads", None),
+    ("k", 4): ("cache_batch", "cache_seq", "act_kv_heads", None),
+    ("v", 4): ("cache_batch", "cache_seq", "act_kv_heads", None),
+    ("abs_pos", 2): ("layers", "cache_seq"),
+    ("abs_pos", 1): ("cache_seq",),
+    ("conv", 4): ("layers", "cache_batch", None, "act_mlp"),
+    ("ssm", 5): ("layers", "cache_batch", "act_heads", None, None),
+    ("enc", 3): ("cache_batch", "frames", "act_embed"),
+    ("pos", 0): (),
+}
+
+
+def cache_axes(cache) -> Any:
+    def walk(path, leaf):
+        name = None
+        for p in reversed(path):
+            if hasattr(p, "key"):
+                name = p.key
+                break
+        rank = len(leaf.shape)
+        if (name, rank) in _CACHE_AXES:
+            return _CACHE_AXES[(name, rank)]
+        # xlstm state tuples & misc: batch dim after the stacked layer dim
+        if rank == 0:
+            return ()
+        if rank >= 2:
+            return ("layers", "cache_batch") + (None,) * (rank - 2)
+        return (None,) * rank
+
+    return jax.tree_util.tree_map_with_path(walk, cache)
+
+
+# ---------------------------------------------------------------------------
+# Artifacts
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class Artifacts:
+    cfg: ArchConfig
+    mesh: Mesh
+    sharder: Sharder
+    model: Any
+    param_shapes: Any
+    param_shardings: Any
+    param_axes: Any
+    opt_shapes: Any
+    opt_shardings: Any
+    train_step: Any          # jitted (params, opt, batch) -> (params, opt, metrics)
+    prefill_step: Any        # jitted (params, batch) -> logits
+    decode_step: Any         # jitted (params, tokens, cache) -> (logits, cache)
+    make_cache_shapes: Callable[[int, int], Any]
+    cache_shardings_for: Callable[[Any], Any]
+    batch_sharding: Callable[[Any], Any]
+    init_params: Callable[[jax.Array], Any]
+    init_opt: Callable[[Any], Any]
+
+
+def build_artifacts(cfg: ArchConfig, mesh: Mesh, *,
+                    opt_cfg: AdamWConfig = AdamWConfig(),
+                    rules: Optional[dict] = None,
+                    total_steps: int = 100_000,
+                    warmup: int = 1000,
+                    donate: bool = True) -> Artifacts:
+    multi_pod = "pod" in mesh.axis_names
+    rules = rules or base_rules(multi_pod)
+    sharder = Sharder(mesh, rules)
+    model = build_model(cfg)
+
+    with use_sharder(sharder):
+        param_shapes, axes = model.init(jax.random.PRNGKey(0), abstract=True)
+    param_axes = axes_tree(param_shapes, axes)
+    param_shardings = tree_shardings(sharder, param_shapes, param_axes)
+    opt_shapes = abstract_state(param_shapes)
+    opt_axes = state_axes(param_axes)
+    opt_shardings = tree_shardings(sharder, opt_shapes, opt_axes)
+
+    dp = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+
+    def batch_sharding(batch_tree):
+        def leaf(x):
+            # leading dim is the global batch; divisibility-aware (long_500k
+            # decodes batch=1: replicate instead of crashing)
+            axes = ("act_batch",) + (None,) * (len(x.shape) - 1)
+            return sharder.sharding(axes, x.shape)
+        return jax.tree.map(leaf, batch_tree)
+
+    def cache_shardings_for(cache_tree):
+        caxes = cache_axes(cache_tree)
+        return tree_shardings(sharder, cache_tree, caxes)
+
+    # -- step functions (traced under the sharder so constraints + MoE
+    #    shard_map see the mesh) ------------------------------------------
+    def train_step(params, opt_state, batch):
+        with use_sharder(sharder):
+            def loss_fn(p):
+                logits, aux = model.forward(p, batch)
+                return lm_loss(logits, batch["labels"], aux)
+
+            loss, grads = jax.value_and_grad(loss_fn)(params)
+            lr_scale = cosine_with_warmup(opt_state.step, warmup=warmup,
+                                          total=total_steps)
+            new_params, new_opt, metrics = apply_updates(
+                params, grads, opt_state, opt_cfg, lr_scale)
+            metrics["loss"] = loss
+            return new_params, new_opt, metrics
+
+    def prefill_step(params, batch):
+        with use_sharder(sharder):
+            logits, _ = model.forward(params, batch)
+            return logits
+
+    def decode_step(params, tokens, cache, extra=None):
+        with use_sharder(sharder):
+            if cfg.family == "vlm":
+                return model.decode_step(params, tokens, cache,
+                                         image_embeds=extra)
+            return model.decode_step(params, tokens, cache)
+
+    scalar_sh = NamedSharding(mesh, P())
+    train_jit = jax.jit(
+        train_step,
+        donate_argnums=(0, 1) if donate else (),
+        out_shardings=(param_shardings, _opt_sh(opt_shardings, scalar_sh),
+                       None),
+    )
+    prefill_jit = jax.jit(prefill_step)
+    decode_jit = jax.jit(decode_step, donate_argnums=(2,) if donate else ())
+
+    def make_cache_shapes(batch_size: int, max_seq: int):
+        return model.init_cache(batch_size, max_seq, abstract=True)
+
+    def init_params(rng):
+        with use_sharder(sharder):
+            init = jax.jit(lambda r: model.init(r)[0],
+                           out_shardings=param_shardings)
+            return init(rng)
+
+    def init_opt(params):
+        return jax.jit(init_state,
+                       out_shardings=_opt_sh(opt_shardings, scalar_sh)
+                       )(params)
+
+    return Artifacts(
+        cfg=cfg, mesh=mesh, sharder=sharder, model=model,
+        param_shapes=param_shapes, param_shardings=param_shardings,
+        param_axes=param_axes,
+        opt_shapes=opt_shapes, opt_shardings=opt_shardings,
+        train_step=train_jit, prefill_step=prefill_jit,
+        decode_step=decode_jit,
+        make_cache_shapes=make_cache_shapes,
+        cache_shardings_for=cache_shardings_for,
+        batch_sharding=batch_sharding,
+        init_params=init_params, init_opt=init_opt,
+    )
+
+
+def _opt_sh(opt_shardings: AdamWState, scalar_sh) -> AdamWState:
+    return AdamWState(scalar_sh, opt_shardings.master, opt_shardings.m,
+                      opt_shardings.v)

@@ -1,0 +1,127 @@
+"""The paper's evaluation CNNs: LeNet-5, VGG-16 (variation D, 2 FC), VGG-8.
+
+All convolutions/FCs route through the DAISM GEMM (im2col — exactly how the
+accelerator consumes them: kernels flattened into SRAM rows, paper Fig 4),
+so Table-2 accuracy experiments exercise the same numerics the multiplier
+tests validate bit-level.
+"""
+from __future__ import annotations
+
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.core.gemm import conv2d_im2col, daism_dot
+from repro.core.config import DaismConfig
+
+from .common import ArchConfig
+from .module import Ctx, he_init, lecun_init, zeros_init
+
+
+def _conv(ctx: Ctx, name: str, x, cout: int, cfg: ArchConfig, *, k: int = 3,
+          init=None):
+    cin = x.shape[-1]
+    w = ctx.param(name, (k, k, cin, cout), cfg.param_dtype,
+                  init or lecun_init(), axes=(None, None, None, None))
+    b = ctx.param(name + "_b", (cout,), cfg.param_dtype, zeros_init(),
+                  axes=(None,))
+    y = conv2d_im2col(x, w.astype(x.dtype), cfg.daism, padding="SAME")
+    return y.astype(x.dtype) + b.astype(x.dtype)
+
+
+def _fc(ctx: Ctx, name: str, x, dout: int, cfg: ArchConfig):
+    din = x.shape[-1]
+    w = ctx.param(name, (din, dout), cfg.param_dtype, lecun_init(),
+                  axes=(None, None))
+    b = ctx.param(name + "_b", (dout,), cfg.param_dtype, zeros_init(),
+                  axes=(None,))
+    if cfg.daism.exact:
+        y = jnp.dot(x, w.astype(x.dtype))
+    else:
+        y = daism_dot(x, w, cfg.daism).astype(x.dtype)
+    return y + b.astype(x.dtype)
+
+
+def _pool(x):
+    return lax.reduce_window(x, -jnp.inf, lax.max, (1, 2, 2, 1),
+                             (1, 2, 2, 1), "VALID")
+
+
+def lenet5(ctx: Ctx, images: jnp.ndarray, cfg: ArchConfig) -> jnp.ndarray:
+    """images: (B, 28, 28, 1) -> logits (B, 10)."""
+    x = images.astype(cfg.compute_dtype)
+    x = jnp.tanh(_conv(ctx, "c1", x, 6, cfg, k=5))
+    x = _pool(x)
+    x = jnp.tanh(_conv(ctx, "c2", x, 16, cfg, k=5))
+    x = _pool(x)
+    x = x.reshape(x.shape[0], -1)
+    x = jnp.tanh(_fc(ctx, "f1", x, 120, cfg))
+    x = jnp.tanh(_fc(ctx, "f2", x, 84, cfg))
+    return _fc(ctx, "out", x, cfg.vocab, cfg).astype(jnp.float32)
+
+
+_VGG16 = (64, 64, "P", 128, 128, "P", 256, 256, 256, "P",
+          512, 512, 512, "P", 512, 512, 512, "P")
+_VGG8 = (64, "P", 128, "P", 256, "P", 512, "P", 512, "P")
+
+
+def _vgg(ctx: Ctx, images, cfg: ArchConfig, plan: Sequence, fc_dim: int):
+    x = images.astype(cfg.compute_dtype)
+    i = 0
+    for item in plan:
+        if item == "P":
+            x = _pool(x)
+        else:
+            # He init: a 16-layer plain-ReLU stack needs gain-2 init to
+            # train without normalization (as the original VGG recipe did)
+            x = jax.nn.relu(_conv(ctx, f"c{i}", x, item, cfg,
+                                  init=he_init()))
+            i += 1
+    x = x.reshape(x.shape[0], -1)
+    x = jax.nn.relu(_fc(ctx, "f1", x, fc_dim, cfg))
+    return _fc(ctx, "out", x, cfg.vocab, cfg).astype(jnp.float32)
+
+
+def vgg16(ctx: Ctx, images, cfg: ArchConfig):
+    """VGG-16 variation D with 2 FC layers (paper §5.1.1), CIFAR10 32x32."""
+    return _vgg(ctx, images, cfg, _VGG16, 512)
+
+
+def vgg8(ctx: Ctx, images, cfg: ArchConfig):
+    return _vgg(ctx, images, cfg, _VGG8, 512)
+
+
+class CNNModel:
+    """Uniform wrapper matching the LM model API (no decode path)."""
+
+    _FNS = {"lenet5": lenet5, "vgg16": vgg16, "vgg8": vgg8}
+
+    def __init__(self, cfg: ArchConfig):
+        self.cfg = cfg
+        self.fn = self._FNS[cfg.name.split("-")[0]]
+
+    def init(self, rng, *, abstract: bool = False, image_shape=None):
+        shape = image_shape or ((1, 28, 28, 1) if "lenet" in self.cfg.name
+                                else (1, 32, 32, 3))
+
+        def build(rng_):
+            ctx = Ctx("init", rng=rng_)
+            self.fn(ctx, jnp.zeros(shape, self.cfg.compute_dtype), self.cfg)
+            return ctx.params, ctx.axes
+
+        if abstract:
+            holder = {}
+
+            def f(r):
+                p, a = build(r)
+                holder.update(a)
+                return p
+
+            return jax.eval_shape(f, rng), holder
+        return build(rng)
+
+    def forward(self, params, batch):
+        ctx = Ctx("apply", params=params)
+        return self.fn(ctx, batch["images"], self.cfg), jnp.zeros((), jnp.float32)

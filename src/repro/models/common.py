@@ -1,0 +1,95 @@
+"""Architecture configuration shared by the whole model zoo."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+from repro.core.config import Backend, DaismConfig, Variant
+
+EXACT = DaismConfig(variant=Variant.EXACT, backend=Backend.EXACT)
+
+
+@dataclasses.dataclass(frozen=True)
+class ArchConfig:
+    """One assigned architecture (frozen+hashable => usable as a jit static)."""
+
+    name: str
+    family: str               # dense | moe | vlm | ssm | audio | hybrid | cnn
+    n_layers: int
+    d_model: int
+    n_heads: int
+    kv_heads: int
+    head_dim: int
+    d_ff: int
+    vocab: int
+    act: str = "swiglu"       # swiglu | geglu | relu2 | gelu
+    norm: str = "rmsnorm"     # rmsnorm | layernorm
+    rope_theta: float = 10000.0
+    tie_embeddings: bool = False
+    logit_softcap: float = 0.0
+    # --- MoE ---
+    n_experts: int = 0
+    topk: int = 0
+    expert_ff: int = 0
+    capacity_factor: float = 1.25
+    moe_impl: str = "ep"      # ep (shard_map) | dense (reference)
+    # --- VLM ---
+    cross_every: int = 0      # a cross-attn block after every N self blocks
+    n_image_tokens: int = 0
+    # --- SSM / hybrid / xLSTM ---
+    ssm_state: int = 0
+    d_inner: int = 0
+    ssm_heads: int = 0
+    conv_kernel: int = 4
+    shared_attn_every: int = 0   # zamba2: shared attn block cadence
+    slstm_every: int = 0         # xlstm: 1 sLSTM per N blocks
+    # --- encoder-decoder (whisper) ---
+    enc_layers: int = 0
+    enc_frames: int = 0
+    # --- attention ---
+    window: int = 0           # sliding window; 0 = full causal
+    attn_chunk: int = 1024    # online-softmax KV chunk length
+    # --- numerics / execution ---
+    param_dtype: str = "bfloat16"
+    compute_dtype: str = "bfloat16"
+    attn_score_dtype: str = "float32"   # bfloat16 halves attention traffic
+    rnn_state_dtype: str = "float32"
+    daism: DaismConfig = EXACT
+    remat: str = "none"       # none | dots | full
+    scan_layers: bool = True
+
+    @property
+    def q_dim(self) -> int:
+        return self.n_heads * self.head_dim
+
+    @property
+    def kv_dim(self) -> int:
+        return self.kv_heads * self.head_dim
+
+    def smoke(self, **overrides) -> "ArchConfig":
+        """Reduced same-family config for CPU smoke tests."""
+        small = dict(
+            n_layers=max(2, min(self.n_layers, 2 + (self.shared_attn_every > 0))),
+            d_model=64,
+            n_heads=4,
+            kv_heads=max(1, min(self.kv_heads, 2)),
+            head_dim=16,
+            d_ff=128 if self.d_ff else 0,
+            vocab=256,
+            n_experts=min(self.n_experts, 4) if self.n_experts else 0,
+            topk=min(self.topk, 2) if self.topk else 0,
+            expert_ff=64 if self.expert_ff else 0,
+            d_inner=128 if self.d_inner else 0,
+            ssm_state=min(self.ssm_state, 16) if self.ssm_state else 0,
+            ssm_heads=4 if self.ssm_heads else 0,
+            cross_every=2 if self.cross_every else 0,
+            n_image_tokens=8 if self.n_image_tokens else 0,
+            enc_layers=2 if self.enc_layers else 0,
+            enc_frames=16 if self.enc_frames else 0,
+            shared_attn_every=2 if self.shared_attn_every else 0,
+            slstm_every=min(self.slstm_every, 2) if self.slstm_every else 0,
+            window=min(self.window, 32) if self.window else 0,
+            attn_chunk=16,
+        )
+        small.update(overrides)
+        return dataclasses.replace(self, **small)

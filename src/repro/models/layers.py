@@ -1,0 +1,275 @@
+"""Common neural layers with pluggable (exact | DAISM) matmul backend.
+
+Every parameter GEMM routes through :func:`dense`, which dispatches to the
+DAISM approximate GEMM when the architecture config carries a non-exact
+``DaismConfig`` — the paper's technique as a first-class framework feature
+(DESIGN.md §2). Dynamic attention GEMMs (qk^T, att@v) stay exact: DAISM
+multiplies a *stationary* SRAM-resident operand (weights) against streamed
+inputs; neither attention operand is stationary.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax import lax
+
+from repro.core.gemm import daism_dot
+from repro.parallel.sharding import constrain
+from repro.parallel.unroll import unroll_for
+
+from .common import ArchConfig
+from .module import Ctx, lecun_init, normal_init, ones_init, zeros_init
+
+# ---------------------------------------------------------------------------
+# Dense / norms
+# ---------------------------------------------------------------------------
+
+def dense(ctx: Ctx, name: str, x: jnp.ndarray, d_out: int, cfg: ArchConfig,
+          *, axes=("embed", "mlp"), use_bias: bool = False,
+          init=None) -> jnp.ndarray:
+    d_in = x.shape[-1]
+    w = ctx.param(name, (d_in, d_out), cfg.param_dtype,
+                  init or lecun_init(), axes=axes)
+    if cfg.daism.exact:
+        out = jnp.dot(x, w.astype(x.dtype))
+    else:
+        out = daism_dot(x, w, cfg.daism).astype(x.dtype)
+    if use_bias:
+        b = ctx.param(name + "_b", (d_out,), cfg.param_dtype, zeros_init(),
+                      axes=(axes[-1],))
+        out = out + b.astype(out.dtype)
+    return out
+
+
+def norm(ctx: Ctx, name: str, x: jnp.ndarray, cfg: ArchConfig) -> jnp.ndarray:
+    d = x.shape[-1]
+    scale = ctx.param(name + "_scale", (d,), "float32", ones_init(),
+                      axes=("act_embed",))
+    xf = x.astype(jnp.float32)
+    if cfg.norm == "layernorm":
+        bias = ctx.param(name + "_bias", (d,), "float32", zeros_init(),
+                         axes=("act_embed",))
+        mu = xf.mean(-1, keepdims=True)
+        var = ((xf - mu) ** 2).mean(-1, keepdims=True)
+        y = (xf - mu) * lax.rsqrt(var + 1e-5) * scale + bias
+    else:  # rmsnorm
+        ms = (xf * xf).mean(-1, keepdims=True)
+        y = xf * lax.rsqrt(ms + 1e-6) * scale
+    return y.astype(x.dtype)
+
+
+def activate(h: jnp.ndarray, g: Optional[jnp.ndarray], act: str) -> jnp.ndarray:
+    if act == "swiglu":
+        return jax.nn.silu(g) * h
+    if act == "geglu":
+        return jax.nn.gelu(g) * h
+    if act == "relu2":
+        r = jax.nn.relu(h)
+        return r * r
+    if act == "gelu":
+        return jax.nn.gelu(h)
+    raise ValueError(act)
+
+
+def mlp(ctx: Ctx, x: jnp.ndarray, cfg: ArchConfig, d_ff: Optional[int] = None,
+        *, use_bias: bool = False) -> jnp.ndarray:
+    d_ff = d_ff or cfg.d_ff
+    gated = cfg.act in ("swiglu", "geglu")
+    h = dense(ctx, "wi", x, d_ff, cfg, axes=("embed", "mlp"), use_bias=use_bias)
+    g = dense(ctx, "wg", x, d_ff, cfg, axes=("embed", "mlp")) if gated else None
+    h = activate(h, g, cfg.act)
+    h = constrain(h, ("act_batch", "act_seq", "act_mlp"))
+    return dense(ctx, "wo", h, x.shape[-1], cfg, axes=("mlp", "embed"),
+                 use_bias=use_bias)
+
+
+# ---------------------------------------------------------------------------
+# Rotary embeddings
+# ---------------------------------------------------------------------------
+
+def rope(x: jnp.ndarray, positions: jnp.ndarray, theta: float) -> jnp.ndarray:
+    """x: (..., S, H, D); positions: broadcastable to (..., S)."""
+    d = x.shape[-1]
+    freqs = 1.0 / (theta ** (np.arange(0, d, 2, dtype=np.float32) / d))
+    ang = positions[..., None].astype(jnp.float32) * freqs  # (..., S, D/2)
+    cos, sin = jnp.cos(ang)[..., None, :], jnp.sin(ang)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Attention (online-softmax over KV chunks; causal / window / cross)
+# ---------------------------------------------------------------------------
+
+def _repeat_kv(k: jnp.ndarray, n_rep: int) -> jnp.ndarray:
+    if n_rep == 1:
+        return k
+    b, s, h, d = k.shape
+    return jnp.broadcast_to(k[:, :, :, None, :], (b, s, h, n_rep, d)
+                            ).reshape(b, s, h * n_rep, d)
+
+
+def attend(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+           q_pos: jnp.ndarray, kv_pos: jnp.ndarray, *,
+           causal: bool, window: int = 0, chunk: int = 1024,
+           softcap: float = 0.0, unroll_category: str = "attn",
+           score_dtype=jnp.float32) -> jnp.ndarray:
+    """Online-softmax attention (never materializes the full S x S matrix).
+
+    q: (B, Sq, H, D); k, v: (B, Skv, KH, D); *_pos: (Sq,) / (Skv,) absolute
+    positions used for causal/window masking (decode passes a 1-length q_pos).
+    """
+    b, sq, h, d = q.shape
+    skv, kh = k.shape[1], k.shape[2]
+    k = _repeat_kv(k, h // kh)
+    v = _repeat_kv(v, h // kh)
+    scale = 1.0 / np.sqrt(d)
+    sd = jnp.dtype(score_dtype)
+    qf = (q.astype(jnp.float32) * scale).astype(sd)
+
+    chunk = min(chunk, skv)
+    n_chunks = int(np.ceil(skv / chunk))
+    pad = n_chunks * chunk - skv
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        kv_pos = jnp.pad(kv_pos, (0, pad), constant_values=2**30)
+    kc = k.reshape(b, n_chunks, chunk, h, d).transpose(1, 0, 2, 3, 4)
+    vc = v.reshape(b, n_chunks, chunk, h, d).transpose(1, 0, 2, 3, 4)
+    pc = kv_pos.reshape(n_chunks, chunk)
+
+    def body(carry, xs):
+        m, l, acc = carry
+        kb, vb, pb = xs  # (B, C, H, D), (B, C, H, D), (C,)
+        s = jnp.einsum("bqhd,bkhd->bhqk", qf, kb.astype(sd),
+                       preferred_element_type=sd)
+        if softcap > 0:
+            s = jnp.tanh(s / softcap) * softcap
+        mask = jnp.ones((sq, kb.shape[1]), bool)
+        if causal:
+            mask &= pb[None, :] <= q_pos[:, None]
+        if window > 0:
+            mask &= pb[None, :] > (q_pos[:, None] - window)
+        mask &= pb[None, :] < 2**30  # padding
+        s = jnp.where(mask[None, None], s, jnp.asarray(-1e30, sd))
+        m_new = jnp.maximum(m, s.max(-1).astype(jnp.float32))
+        corr = jnp.exp(m - m_new)
+        p = jnp.exp(s.astype(jnp.float32) - m_new[..., None]).astype(sd)
+        l_new = l * corr + p.astype(jnp.float32).sum(-1)
+        acc_new = acc * corr[..., None] + jnp.einsum(
+            "bhqk,bkhd->bhqd", p, vb.astype(sd),
+            preferred_element_type=jnp.float32)
+        return (m_new, l_new, acc_new), None
+
+    m0 = jnp.full((b, h, sq), -jnp.inf, jnp.float32)
+    l0 = jnp.zeros((b, h, sq), jnp.float32)
+    a0 = jnp.zeros((b, h, sq, d), jnp.float32)
+    (m, l, acc), _ = lax.scan(body, (m0, l0, a0), (kc, vc, pc),
+                              unroll=min(unroll_for(unroll_category), n_chunks))
+    out = acc / jnp.maximum(l, 1e-30)[..., None]
+    return out.transpose(0, 2, 1, 3).astype(q.dtype)  # (B, Sq, H, D)
+
+
+def self_attention(ctx: Ctx, x: jnp.ndarray, cfg: ArchConfig, *,
+                   positions: jnp.ndarray, cache: Optional[dict] = None,
+                   causal: bool = True, n_heads: int = 0, kv_heads: int = 0,
+                   head_dim: int = 0, use_bias: bool = False,
+                   unroll_category: str = "attn"
+                   ) -> Tuple[jnp.ndarray, Optional[dict]]:
+    """GQA self-attention. With ``cache`` (decode) appends K/V at
+    ``cache['pos']`` and attends over the whole cache."""
+    nh = n_heads or cfg.n_heads
+    kh = kv_heads or cfg.kv_heads
+    hd = head_dim or cfg.head_dim
+    b, s, _ = x.shape
+    q = dense(ctx, "wq", x, nh * hd, cfg, axes=("embed", "heads"),
+              use_bias=use_bias).reshape(b, s, nh, hd)
+    k = dense(ctx, "wk", x, kh * hd, cfg, axes=("embed", "kv_heads"),
+              use_bias=use_bias).reshape(b, s, kh, hd)
+    v = dense(ctx, "wv", x, kh * hd, cfg, axes=("embed", "kv_heads"),
+              use_bias=use_bias).reshape(b, s, kh, hd)
+    if cfg.rope_theta:
+        q = rope(q, positions, cfg.rope_theta)
+        k = rope(k, positions, cfg.rope_theta)
+    q = constrain(q, ("act_batch", "act_seq", "act_heads", None))
+
+    new_cache = None
+    if cache is not None:
+        ck, cv, pos = cache["k"], cache["v"], cache["pos"]
+        size = ck.shape[1]
+        ring = "abs_pos" in cache
+        slot = lax.rem(pos, size) if ring else pos
+        ck = lax.dynamic_update_slice(ck, k.astype(ck.dtype), (0, slot, 0, 0))
+        cv = lax.dynamic_update_slice(cv, v.astype(cv.dtype), (0, slot, 0, 0))
+        ck = constrain(ck, ("cache_batch", "cache_seq", "act_kv_heads", None))
+        cv = constrain(cv, ("cache_batch", "cache_seq", "act_kv_heads", None))
+        new_cache = dict(k=ck, v=cv, pos=pos + s)
+        if ring:
+            ap = lax.dynamic_update_slice(
+                cache["abs_pos"], positions.astype(jnp.int32), (slot,))
+            new_cache["abs_pos"] = ap
+            kv_pos = jnp.where(ap < 0, 2**30, ap)  # empty slots masked out
+        else:
+            kv_pos = jnp.arange(size)
+        out = attend(q, ck, cv, positions, kv_pos, causal=causal,
+                     window=cfg.window, chunk=cfg.attn_chunk,
+                     softcap=cfg.logit_softcap,
+                     unroll_category=unroll_category)
+    else:
+        out = attend(q, k, v, positions, positions, causal=causal,
+                     window=cfg.window, chunk=cfg.attn_chunk,
+                     softcap=cfg.logit_softcap,
+                     unroll_category=unroll_category,
+                     score_dtype=cfg.attn_score_dtype)
+    out = out.reshape(b, s, nh * hd)
+    out = dense(ctx, "wo", out, x.shape[-1], cfg, axes=("heads", "embed"),
+                use_bias=use_bias)
+    return out, new_cache
+
+
+def cross_attention(ctx: Ctx, x: jnp.ndarray, kv_src: jnp.ndarray,
+                    cfg: ArchConfig, *, use_bias: bool = False) -> jnp.ndarray:
+    """Full (non-causal) cross attention against encoder/image states."""
+    nh, kh, hd = cfg.n_heads, cfg.kv_heads, cfg.head_dim
+    b, s, _ = x.shape
+    skv = kv_src.shape[1]
+    q = dense(ctx, "wq", x, nh * hd, cfg, axes=("embed", "heads"),
+              use_bias=use_bias).reshape(b, s, nh, hd)
+    k = dense(ctx, "wk", kv_src, kh * hd, cfg, axes=("embed", "kv_heads"),
+              use_bias=use_bias).reshape(b, skv, kh, hd)
+    v = dense(ctx, "wv", kv_src, kh * hd, cfg, axes=("embed", "kv_heads"),
+              use_bias=use_bias).reshape(b, skv, kh, hd)
+    out = attend(q, k, v, jnp.arange(s), jnp.arange(skv), causal=False,
+                 chunk=skv,  # single chunk: small KV, uniform attn trips
+                 score_dtype=cfg.attn_score_dtype)
+    out = out.reshape(b, s, nh * hd)
+    return dense(ctx, "wo", out, x.shape[-1], cfg, axes=("heads", "embed"),
+                 use_bias=use_bias)
+
+
+# ---------------------------------------------------------------------------
+# Embedding / unembedding
+# ---------------------------------------------------------------------------
+
+def embed(ctx: Ctx, tokens: jnp.ndarray, cfg: ArchConfig) -> jnp.ndarray:
+    e = ctx.param("embedding", (cfg.vocab, cfg.d_model), cfg.param_dtype,
+                  normal_init(1.0), axes=("vocab", "embed"))
+    x = jnp.take(e, tokens, axis=0)
+    return constrain(x, ("act_batch", "act_seq", "act_embed"))
+
+
+def unembed(ctx: Ctx, x: jnp.ndarray, cfg: ArchConfig) -> jnp.ndarray:
+    if cfg.tie_embeddings:
+        e = ctx.param("embedding", (cfg.vocab, cfg.d_model), cfg.param_dtype,
+                      normal_init(1.0), axes=("vocab", "embed"))
+        logits = jnp.dot(x, e.T.astype(x.dtype))
+    else:
+        logits = dense(ctx, "lm_head", x, cfg.vocab, cfg,
+                       axes=("embed", "vocab"))
+    return constrain(logits, ("act_batch", "act_seq", "act_vocab"))
+

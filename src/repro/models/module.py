@@ -1,0 +1,168 @@
+"""Micro-module system: explicit param pytrees with logical sharding axes.
+
+No flax in this container, and a framework wants explicit state anyway
+(MaxText-style): a model is a pure function ``fn(ctx, *args) -> out`` that
+declares parameters through ``ctx.param(...)``. Three contexts:
+
+  * ``init``  — create parameters (returns the params pytree);
+  * ``apply`` — read parameters from an existing pytree;
+  * the logical sharding axes for every parameter are recorded at declaration
+    time and retrievable as a matching pytree (``axes_of``).
+
+Layer stacks are declared as *stacked* parameters (leading ``layers`` axis)
+and consumed with ``jax.lax.scan`` — this keeps HLO size O(1) in depth, which
+matters at 96 layers / 512 devices.
+"""
+from __future__ import annotations
+
+import contextlib
+import threading
+from typing import Any, Callable, Dict, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+Params = Dict[str, Any]
+Axes = Tuple[Optional[str], ...]
+
+
+# ---------------------------------------------------------------------------
+# Initializers (match common LM practice)
+# ---------------------------------------------------------------------------
+
+def normal_init(stddev: float = 0.02):
+    def init(key, shape, dtype):
+        return (jax.random.normal(key, shape, jnp.float32) * stddev).astype(dtype)
+    return init
+
+
+def lecun_init():
+    def init(key, shape, dtype):
+        fan_in = shape[-2] if len(shape) >= 2 else shape[-1]
+        std = 1.0 / np.sqrt(fan_in)
+        return (jax.random.normal(key, shape, jnp.float32) * std).astype(dtype)
+    return init
+
+
+def he_init():
+    """Kaiming/He init (gain 2 for ReLU): required to train deep plain-ReLU
+    stacks like VGG-16 without normalization layers. For conv kernels
+    (kh, kw, cin, cout) fan_in = kh*kw*cin."""
+    def init(key, shape, dtype):
+        fan_in = int(np.prod(shape[:-1])) if len(shape) >= 2 else shape[-1]
+        std = np.sqrt(2.0 / fan_in)
+        return (jax.random.normal(key, shape, jnp.float32) * std).astype(dtype)
+    return init
+
+
+def zeros_init():
+    def init(key, shape, dtype):
+        return jnp.zeros(shape, dtype)
+    return init
+
+
+def ones_init():
+    def init(key, shape, dtype):
+        return jnp.ones(shape, dtype)
+    return init
+
+
+# ---------------------------------------------------------------------------
+# Context
+# ---------------------------------------------------------------------------
+
+class Ctx:
+    """Parameter declaration/lookup context.
+
+    mode='init': creates params (optionally abstractly under eval_shape).
+    mode='apply': reads them from the provided tree.
+    Axes are recorded in both modes into ``axes`` (a flat dict path->axes).
+    """
+
+    def __init__(self, mode: str, params: Optional[Params] = None,
+                 rng: Optional[jax.Array] = None):
+        assert mode in ("init", "apply")
+        self.mode = mode
+        self.params: Params = params if params is not None else {}
+        self.rng = rng
+        self._path: list = []
+        self.axes: Dict[Tuple[str, ...], Axes] = {}
+        self._counter = 0
+
+    @contextlib.contextmanager
+    def scope(self, name: str):
+        self._path.append(name)
+        try:
+            yield self
+        finally:
+            self._path.pop()
+
+    def _subtree(self, create: bool) -> Params:
+        t = self.params
+        for p in self._path:
+            if p not in t:
+                if not create:
+                    raise KeyError(f"missing param scope {'/'.join(self._path)}")
+                t[p] = {}
+            t = t[p]
+        return t
+
+    def _fold_key(self) -> jax.Array:
+        self._counter += 1
+        return jax.random.fold_in(self.rng, self._counter)
+
+    def param(self, name: str, shape: Sequence[int], dtype,
+              init: Callable = None, axes: Axes = None) -> jnp.ndarray:
+        path = tuple(self._path) + (name,)
+        if axes is not None and len(axes) != len(shape):
+            raise ValueError(f"{path}: axes {axes} rank != shape {shape}")
+        self.axes[path] = axes if axes is not None else (None,) * len(shape)
+        if self.mode == "init":
+            t = self._subtree(create=True)
+            if name not in t:
+                init = init or normal_init()
+                t[name] = init(self._fold_key(), tuple(shape), dtype)
+            return t[name]
+        t = self._subtree(create=False)
+        if name not in t:
+            raise KeyError(f"missing param {'/'.join(path)}")
+        return t[name]
+
+
+def init_model(fn: Callable, rng: jax.Array, *args, abstract: bool = False, **kw):
+    """Run ``fn`` in init mode. Returns (params, axes_by_path).
+
+    abstract=True runs under eval_shape (no allocation) — used by the dry-run
+    to build parameter ShapeDtypeStructs for 340B-scale models.
+    """
+    if abstract:
+        holder = {}
+
+        def shaped(rng_):
+            ctx = Ctx("init", rng=rng_)
+            fn(ctx, *args, **kw)
+            holder["axes"] = ctx.axes
+            return ctx.params
+
+        params = jax.eval_shape(shaped, rng)
+        return params, holder["axes"]
+    ctx = Ctx("init", rng=rng)
+    fn(ctx, *args, **kw)
+    return ctx.params, ctx.axes
+
+
+def apply_model(fn: Callable, params: Params, *args, **kw):
+    ctx = Ctx("apply", params=params)
+    return fn(ctx, *args, **kw)
+
+
+def axes_tree(params: Params, axes: Dict[Tuple[str, ...], Axes]) -> Params:
+    """Build a pytree of logical-axes tuples congruent with ``params``."""
+
+    def walk(tree, path):
+        if isinstance(tree, dict):
+            return {k: walk(v, path + (k,)) for k, v in tree.items()}
+        return axes[path]
+
+    return walk(params, ())

@@ -1,0 +1,43 @@
+"""Model registry: family -> model class, plus the shared LM loss."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .cnn import CNNModel
+from .common import ArchConfig
+from .transformer import DecoderLM, EncDecLM
+from .xlstm import XLSTMModel
+from .zamba import ZambaModel
+
+_FAMILIES = {
+    "dense": DecoderLM,
+    "moe": DecoderLM,
+    "vlm": DecoderLM,
+    "audio": EncDecLM,
+    "ssm": XLSTMModel,
+    "hybrid": ZambaModel,
+    "cnn": CNNModel,
+}
+
+
+def build_model(cfg: ArchConfig):
+    try:
+        cls = _FAMILIES[cfg.family]
+    except KeyError:
+        raise ValueError(f"unknown family {cfg.family!r} for arch {cfg.name}")
+    return cls(cfg)
+
+
+def lm_loss(logits: jnp.ndarray, labels: jnp.ndarray,
+            aux: jnp.ndarray = 0.0, aux_weight: float = 0.01) -> jnp.ndarray:
+    """Next-token cross entropy in f32 (+ MoE load-balance aux)."""
+    logits = logits.astype(jnp.float32)
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    nll = -jnp.take_along_axis(logp, labels[..., None], axis=-1)[..., 0]
+    return nll.mean() + aux_weight * aux
+
+
+def classifier_loss(logits: jnp.ndarray, labels: jnp.ndarray) -> jnp.ndarray:
+    logp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+    return -jnp.take_along_axis(logp, labels[:, None], axis=-1).mean()

@@ -1,0 +1,443 @@
+"""Decoder-only transformer family: dense, MoE, VLM (cross-attn), enc-dec.
+
+Layer stacks are *stacked-parameter scans* (MaxText-style): one layer's
+params are initialized under ``jax.vmap`` over a leading ``layers`` axis and
+consumed with ``lax.scan``, keeping HLO size O(1) in depth — essential for
+96-layer/340B dry-runs on a 512-device mesh.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.parallel.sharding import constrain
+from repro.parallel.unroll import unroll_for
+
+from .common import ArchConfig
+from .layers import (cross_attention, dense, embed, mlp, norm,
+                     self_attention, unembed)
+from .module import Ctx, apply_model, init_model
+from .moe import moe_ffn
+
+Params = Dict[str, Any]
+
+
+# ---------------------------------------------------------------------------
+# Blocks
+# ---------------------------------------------------------------------------
+
+def decoder_block(ctx: Ctx, cfg: ArchConfig, x, *, positions, cache=None,
+                  causal=True):
+    """Pre-norm self-attention + FFN (dense or MoE). Returns (x, cache, aux)."""
+    use_bias = cfg.norm == "layernorm"  # starcoder2/whisper-style
+    with ctx.scope("attn"):
+        h, new_cache = self_attention(
+            ctx, norm(ctx, "ln1", x, cfg), cfg, positions=positions,
+            cache=cache, causal=causal, use_bias=use_bias)
+    x = x + h
+    aux = jnp.zeros((), jnp.float32)
+    with ctx.scope("ffn"):
+        y = norm(ctx, "ln2", x, cfg)
+        if cfg.n_experts:
+            h, aux = moe_ffn(ctx, y, cfg)
+        else:
+            h = mlp(ctx, y, cfg, use_bias=use_bias)
+    x = x + h
+    x = constrain(x, ("act_batch", "act_seq", "act_embed"))
+    return x, new_cache, aux
+
+
+def cross_block(ctx: Ctx, cfg: ArchConfig, x, kv_src):
+    """Cross-attention block (VLM / whisper decoder insert)."""
+    with ctx.scope("xattn"):
+        h = cross_attention(ctx, norm(ctx, "ln1", x, cfg), kv_src, cfg)
+    x = x + h
+    with ctx.scope("ffn"):
+        x = x + mlp(ctx, norm(ctx, "ln2", x, cfg), cfg)
+    return constrain(x, ("act_batch", "act_seq", "act_embed"))
+
+
+# ---------------------------------------------------------------------------
+# Stacked-layer machinery
+# ---------------------------------------------------------------------------
+
+def stacked_init(layer_fn, rng, n_layers: int, *args, **kw):
+    """Init a layer stack: returns (stacked_params, axes with 'layers' prepended)."""
+    keys = jax.random.split(rng, n_layers)
+    holder = {}
+
+    def one(k):
+        ctx = Ctx("init", rng=k)
+        layer_fn(ctx, *args, **kw)
+        holder["axes"] = ctx.axes
+        return ctx.params
+
+    params = jax.vmap(one)(keys)
+    axes = {path: ("layers",) + a for path, a in holder["axes"].items()}
+    return params, axes
+
+
+def apply_remat(fn, remat: str):
+    """Wrap a params-level function (pytree args only) with a remat policy.
+
+    'dots'    saves every matmul output (incl. batched attention scores);
+    'dots_nb' saves only non-batched matmuls (weight GEMMs) — attention
+              scores are recomputed, the sweet spot found in the §Perf log;
+    'full'    recomputes everything.
+    """
+    if remat == "dots":
+        return jax.checkpoint(
+            fn, policy=jax.checkpoint_policies.checkpoint_dots)
+    if remat == "dots_nb":
+        return jax.checkpoint(
+            fn,
+            policy=jax.checkpoint_policies.checkpoint_dots_with_no_batch_dims)
+    if remat == "full":
+        return jax.checkpoint(fn)
+    return fn
+
+
+def scan_layers(layer_fn, stacked_params, x, *, cache=None,
+                unroll: int = 0, remat: str = "none", **kw):
+    """Run x through a stacked-param layer scan.
+
+    cache (optional): pytree stacked on layer dim; scanned alongside params
+    and the per-layer updated cache is emitted as a stacked output.
+    remat: activation checkpoint policy applied per layer (params-level, so
+    jax.checkpoint sees only pytree arguments).
+    """
+    inner = apply_remat(
+        lambda p, h, c: apply_model(layer_fn, p, h, cache=c, **kw), remat)
+
+    def body(carry, layer_in):
+        h, aux_acc = carry
+        p, c = layer_in
+        h, new_c, aux = inner(p, h, c)
+        return (h, aux_acc + aux), new_c
+
+    (x, aux), new_cache = lax.scan(
+        body, (x, jnp.zeros((), jnp.float32)), (stacked_params, cache),
+        unroll=unroll or unroll_for("layers"))
+    return x, new_cache, aux
+
+
+# ---------------------------------------------------------------------------
+# Decoder-only LM (dense + MoE + VLM)
+# ---------------------------------------------------------------------------
+
+class DecoderLM:
+    """Dense / MoE / VLM decoder LM with a uniform train/prefill/decode API."""
+
+    def __init__(self, cfg: ArchConfig):
+        self.cfg = cfg
+        self.is_vlm = cfg.cross_every > 0
+
+    # -- init ------------------------------------------------------------
+    def init(self, rng, *, abstract: bool = False):
+        def build(rng_):
+            k_embed, k_layers, k_cross, k_head = jax.random.split(rng_, 4)
+            params: Params = {}
+            axes = {}
+            ctx = Ctx("init", rng=k_embed)
+            embed(ctx, jnp.zeros((1, 1), jnp.int32), self.cfg)
+            if not self.cfg.tie_embeddings:
+                x0 = jnp.zeros((1, 1, self.cfg.d_model), self.cfg.compute_dtype)
+                norm(ctx, "final_ln", x0, self.cfg)
+                unembed(ctx, x0, self.cfg)
+            else:
+                norm(ctx, "final_ln",
+                     jnp.zeros((1, 1, self.cfg.d_model), self.cfg.compute_dtype),
+                     self.cfg)
+            params.update(ctx.params)
+            axes.update(ctx.axes)
+
+            pos0 = jnp.zeros((1,), jnp.int32)
+            x0 = jnp.zeros((1, 1, self.cfg.d_model), self.cfg.compute_dtype)
+            lp, la = stacked_init(
+                lambda c, xx: decoder_block(c, self.cfg, xx, positions=pos0),
+                k_layers, self.cfg.n_layers, x0)
+            params["blocks"] = lp
+            axes.update({("blocks",) + p: a for p, a in la.items()})
+
+            if self.is_vlm:
+                kv0 = jnp.zeros((1, 1, self.cfg.d_model), self.cfg.compute_dtype)
+                cp, ca = stacked_init(
+                    lambda c, xx: cross_block(c, self.cfg, xx, kv0),
+                    k_cross, self.n_cross, x0)
+                params["cross_blocks"] = cp
+                axes.update({("cross_blocks",) + p: a for p, a in ca.items()})
+            return params, axes
+
+        if abstract:
+            axes_holder = {}
+
+            def build_shapes(r):
+                p, a = build(r)
+                axes_holder.update(a)
+                return p
+
+            shapes = jax.eval_shape(build_shapes, rng)
+            return shapes, axes_holder
+        return build(rng)
+
+    @property
+    def n_cross(self) -> int:
+        return self.cfg.n_layers // self.cfg.cross_every if self.is_vlm else 0
+
+    # -- forward (train / prefill) ----------------------------------------
+    def forward(self, params: Params, batch: Dict[str, jnp.ndarray]):
+        cfg = self.cfg
+        tokens = batch["tokens"]
+        b, s = tokens.shape
+        positions = jnp.arange(s)
+        ctx = Ctx("apply", params=params)
+        x = embed(ctx, tokens, cfg)
+
+        layer = functools.partial(decoder_block, positions=positions,
+                                  causal=True)
+        layer_fn = lambda c, xx, cache=None: layer(c, cfg, xx, cache=cache)
+
+        if not self.is_vlm:
+            x, _, aux = scan_layers(layer_fn, params["blocks"], x,
+                                    remat=cfg.remat)
+        else:
+            img = batch["image_embeds"].astype(x.dtype)
+            aux = jnp.zeros((), jnp.float32)
+            per = cfg.cross_every
+            for g in range(self.n_cross):
+                sub = jax.tree.map(lambda p: p[g * per:(g + 1) * per],
+                                   params["blocks"])
+                x, _, a = scan_layers(layer_fn, sub, x, remat=cfg.remat)
+                aux = aux + a
+                cparams = jax.tree.map(lambda p: p[g], params["cross_blocks"])
+                cross_fn = apply_remat(
+                    lambda cp, xx: apply_model(
+                        lambda c, h: cross_block(c, cfg, h, img), cp, xx),
+                    cfg.remat)
+                x = cross_fn(cparams, x)
+        x = norm(ctx, "final_ln", x, cfg)
+        logits = unembed(ctx, x, cfg)
+        return logits, aux
+
+    # -- KV cache ----------------------------------------------------------
+    def init_cache(self, batch_size: int, max_seq: int, *,
+                   abstract: bool = False):
+        cfg = self.cfg
+        ring = bool(cfg.window) and cfg.window < max_seq
+        size = min(cfg.window, max_seq) if ring else max_seq
+        kshape = (cfg.n_layers, batch_size, size, cfg.kv_heads, cfg.head_dim)
+
+        def mk(shape, dtype, fill=0):
+            if abstract:
+                return jax.ShapeDtypeStruct(shape, dtype)
+            return jnp.full(shape, fill, dtype)
+
+        cache = {
+            "k": mk(kshape, jnp.dtype(cfg.compute_dtype)),
+            "v": mk(kshape, jnp.dtype(cfg.compute_dtype)),
+            "pos": mk((), jnp.int32),
+        }
+        if ring:  # ring buffer: absolute position of each slot, -1 = empty
+            cache["abs_pos"] = mk((cfg.n_layers, size), jnp.int32, fill=-1)
+        return cache
+
+    # -- decode (one token, KV cache) --------------------------------------
+    def decode_step(self, params: Params, tokens: jnp.ndarray, cache,
+                    image_embeds: Optional[jnp.ndarray] = None):
+        """tokens: (B, 1). Returns (logits (B, 1, V), new cache)."""
+        cfg = self.cfg
+        pos = cache["pos"]
+        positions = jnp.reshape(pos, (1,))
+        ctx = Ctx("apply", params=params)
+        x = embed(ctx, tokens, cfg)
+
+        ring = "abs_pos" in cache
+        layer_cache = {"k": cache["k"], "v": cache["v"]}
+        if ring:
+            layer_cache["abs_pos"] = cache["abs_pos"]
+
+        def layer_fn(c, xx, cache=None):
+            lc = dict(cache, pos=pos)
+            xx, nc, aux = decoder_block(c, cfg, xx, positions=positions,
+                                        cache=lc, causal=True)
+            nc.pop("pos")
+            return xx, nc, aux
+
+        if not self.is_vlm:
+            x, new_lc, _ = scan_layers(layer_fn, params["blocks"], x,
+                                       cache=layer_cache)
+        else:
+            img = image_embeds.astype(x.dtype)
+            per = cfg.cross_every
+            new_parts = []
+            for g in range(self.n_cross):
+                sub = jax.tree.map(lambda p: p[g * per:(g + 1) * per],
+                                   params["blocks"])
+                subc = jax.tree.map(lambda c: c[g * per:(g + 1) * per],
+                                    layer_cache)
+                x, nc, _ = scan_layers(layer_fn, sub, x, cache=subc)
+                new_parts.append(nc)
+                cparams = jax.tree.map(lambda p: p[g], params["cross_blocks"])
+                x = apply_model(lambda c, xx: cross_block(c, cfg, xx, img),
+                                cparams, x)
+            new_lc = jax.tree.map(lambda *xs: jnp.concatenate(xs, 0),
+                                  *new_parts)
+        x = norm(ctx, "final_ln", x, cfg)
+        logits = unembed(ctx, x, cfg)
+        new_cache = dict(new_lc, pos=pos + 1)
+        return logits, new_cache
+
+
+# ---------------------------------------------------------------------------
+# Encoder-decoder (whisper backbone; conv/audio frontend is a stub per the
+# assignment — input_specs provides precomputed frame embeddings)
+# ---------------------------------------------------------------------------
+
+def encoder_block(ctx: Ctx, cfg: ArchConfig, x, *, positions, cache=None):
+    with ctx.scope("attn"):
+        h, _ = self_attention(ctx, norm(ctx, "ln1", x, cfg), cfg,
+                              positions=positions, causal=False,
+                              use_bias=True, unroll_category="attn_enc")
+    x = x + h
+    with ctx.scope("ffn"):
+        x = x + mlp(ctx, norm(ctx, "ln2", x, cfg), cfg, use_bias=True)
+    x = constrain(x, ("act_batch", "frames", "act_embed"))
+    return x, None, jnp.zeros((), jnp.float32)
+
+
+def encdec_decoder_block(ctx: Ctx, cfg: ArchConfig, x, *, positions,
+                         enc_kv, cache=None):
+    use_bias = True
+    with ctx.scope("attn"):
+        h, new_cache = self_attention(ctx, norm(ctx, "ln1", x, cfg), cfg,
+                                      positions=positions, cache=cache,
+                                      causal=True, use_bias=use_bias)
+    x = x + h
+    with ctx.scope("xattn"):
+        h = cross_attention(ctx, norm(ctx, "lnx", x, cfg), enc_kv, cfg,
+                            use_bias=use_bias)
+    x = x + h
+    with ctx.scope("ffn"):
+        x = x + mlp(ctx, norm(ctx, "ln2", x, cfg), cfg, use_bias=use_bias)
+    x = constrain(x, ("act_batch", "act_seq", "act_embed"))
+    return x, new_cache, jnp.zeros((), jnp.float32)
+
+
+class EncDecLM:
+    """Whisper-style: transformer encoder over precomputed frame embeddings,
+    causal decoder with per-layer cross attention."""
+
+    def __init__(self, cfg: ArchConfig):
+        self.cfg = cfg
+
+    def init(self, rng, *, abstract: bool = False):
+        def build(rng_):
+            ke, kd, kx = jax.random.split(rng_, 3)
+            cfg = self.cfg
+            params: Params = {}
+            axes = {}
+            ctx = Ctx("init", rng=kx)
+            embed(ctx, jnp.zeros((1, 1), jnp.int32), cfg)
+            x0 = jnp.zeros((1, 1, cfg.d_model), cfg.compute_dtype)
+            norm(ctx, "final_ln", x0, cfg)
+            unembed(ctx, x0, cfg)
+            # learned positional embeddings for frames (frontend stub)
+            ctx.param("enc_pos", (cfg.enc_frames, cfg.d_model),
+                      cfg.param_dtype, axes=("frames", "embed"))
+            params.update(ctx.params)
+            axes.update(ctx.axes)
+            pos0 = jnp.zeros((1,), jnp.int32)
+            ep, ea = stacked_init(
+                lambda c, xx: encoder_block(c, cfg, xx, positions=pos0),
+                ke, cfg.enc_layers, x0)
+            params["enc_blocks"] = ep
+            axes.update({("enc_blocks",) + p: a for p, a in ea.items()})
+            dp, da = stacked_init(
+                lambda c, xx: encdec_decoder_block(c, cfg, xx, positions=pos0,
+                                                   enc_kv=x0),
+                kd, cfg.n_layers, x0)
+            params["dec_blocks"] = dp
+            axes.update({("dec_blocks",) + p: a for p, a in da.items()})
+            return params, axes
+
+        if abstract:
+            axes_holder = {}
+
+            def build_shapes(r):
+                p, a = build(r)
+                axes_holder.update(a)
+                return p
+
+            shapes = jax.eval_shape(build_shapes, rng)
+            return shapes, axes_holder
+        return build(rng)
+
+    def encode(self, params, frames):
+        cfg = self.cfg
+        ctx = Ctx("apply", params=params)
+        pe = ctx.param("enc_pos", (cfg.enc_frames, cfg.d_model),
+                       cfg.param_dtype, axes=("frames", "embed"))
+        x = frames.astype(cfg.compute_dtype) + pe.astype(cfg.compute_dtype)
+        positions = jnp.arange(frames.shape[1])
+        enc_fn = lambda c, xx, cache=None: encoder_block(
+            c, cfg, xx, positions=positions)
+        x, _, _ = scan_layers(enc_fn, params["enc_blocks"], x,
+                              remat=cfg.remat)
+        return x
+
+    def forward(self, params, batch):
+        cfg = self.cfg
+        enc = self.encode(params, batch["frames"])
+        tokens = batch["tokens"]
+        positions = jnp.arange(tokens.shape[1])
+        ctx = Ctx("apply", params=params)
+        x = embed(ctx, tokens, cfg)
+        dec_fn = lambda c, xx, cache=None: encdec_decoder_block(
+            c, cfg, xx, positions=positions, enc_kv=enc)
+        x, _, _ = scan_layers(dec_fn, params["dec_blocks"], x,
+                              remat=cfg.remat)
+        x = norm(ctx, "final_ln", x, cfg)
+        return unembed(ctx, x, cfg), jnp.zeros((), jnp.float32)
+
+    def init_cache(self, batch_size: int, max_seq: int, *,
+                   abstract: bool = False):
+        cfg = self.cfg
+
+        def mk(shape, dtype):
+            if abstract:
+                return jax.ShapeDtypeStruct(shape, dtype)
+            return jnp.zeros(shape, dtype)
+
+        kshape = (cfg.n_layers, batch_size, max_seq, cfg.kv_heads,
+                  cfg.head_dim)
+        dt = jnp.dtype(cfg.compute_dtype)
+        return {
+            "k": mk(kshape, dt), "v": mk(kshape, dt),
+            "enc": mk((batch_size, cfg.enc_frames, cfg.d_model), dt),
+            "pos": mk((), jnp.int32),
+        }
+
+    def decode_step(self, params, tokens, cache):
+        cfg = self.cfg
+        pos = cache["pos"]
+        positions = pos[None].reshape(1,)
+        enc = cache["enc"]
+        ctx = Ctx("apply", params=params)
+        x = embed(ctx, tokens, cfg)
+
+        def layer_fn(c, xx, cache=None):
+            lc = dict(k=cache["k"], v=cache["v"], pos=pos)
+            xx, nc, aux = encdec_decoder_block(
+                c, cfg, xx, positions=positions, enc_kv=enc, cache=lc)
+            return xx, {"k": nc["k"], "v": nc["v"]}, aux
+
+        x, new_lc, _ = scan_layers(layer_fn, params["dec_blocks"], x,
+                                   cache={"k": cache["k"], "v": cache["v"]})
+        x = norm(ctx, "final_ln", x, cfg)
+        logits = unembed(ctx, x, cfg)
+        return logits, {"k": new_lc["k"], "v": new_lc["v"], "enc": enc,
+                        "pos": pos + 1}

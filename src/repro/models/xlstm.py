@@ -1,0 +1,300 @@
+"""xLSTM (sLSTM + mLSTM blocks) — attention-free LM (arXiv:2405.04517).
+
+Faithful cell equations with exponential gating + max-stabilizer state.
+Training uses a time scan (the chunkwise-parallel mLSTM form is a §Perf
+candidate, recorded in EXPERIMENTS.md); decode is O(1) per token with
+matrix-memory state — which is why this arch *runs* the long_500k shape.
+
+DAISM applicability: all projections (q/k/v/o, up/down) route through
+``dense`` and therefore the approximate GEMM; the recurrences themselves are
+elementwise (no stationary operand) and stay exact — DESIGN.md §4.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.parallel.sharding import constrain
+from repro.parallel.unroll import unroll_for
+
+from .common import ArchConfig
+from .layers import dense, norm, unembed, embed
+from .module import Ctx, apply_model, init_model
+from .transformer import scan_layers, stacked_init
+
+
+# ---------------------------------------------------------------------------
+# mLSTM: matrix memory C (hd x hd) per head, exponential gating
+# ---------------------------------------------------------------------------
+
+def _mlstm_step(state, inputs):
+    """state: (C (B,H,hd,hd), n (B,H,hd), m (B,H)); inputs per timestep."""
+    C, n, m = state
+    sd = C.dtype
+    q, k, v, i_pre, f_pre = inputs  # q,k,v: (B,H,hd); gates: (B,H)
+    m_new = jnp.maximum(f_pre + m, i_pre)
+    i_g = jnp.exp(i_pre - m_new)[..., None].astype(sd)
+    f_g = jnp.exp(f_pre + m - m_new)[..., None].astype(sd)
+    ks_ = k.astype(sd)
+    C = f_g[..., None] * C + i_g[..., None] * (
+        v.astype(sd)[..., :, None] * ks_[..., None, :])
+    n = f_g * n + i_g * ks_
+    num = jnp.einsum("bhij,bhj->bhi", C, q.astype(sd),
+                     preferred_element_type=jnp.float32)
+    den = jnp.maximum(jnp.abs(jnp.einsum(
+        "bhj,bhj->bh", n, q.astype(sd),
+        preferred_element_type=jnp.float32)), 1.0)
+    h = num / den[..., None]
+    return (C, n, m_new), h
+
+
+def mlstm_cell(ctx: Ctx, x: jnp.ndarray, cfg: ArchConfig, state=None):
+    """x: (B, S, d). Returns (y (B, S, d), new_state)."""
+    b, s, d = x.shape
+    nh = cfg.n_heads
+    hd = d // nh
+    q = dense(ctx, "wq", x, d, cfg, axes=("embed", "heads"))
+    k = dense(ctx, "wk", x, d, cfg, axes=("embed", "heads")) / jnp.sqrt(
+        jnp.asarray(hd, x.dtype))
+    v = dense(ctx, "wv", x, d, cfg, axes=("embed", "heads"))
+    gates = dense(ctx, "wgate", x, 3 * nh, cfg, axes=("embed", "heads"))
+    i_pre, f_pre, o_pre = jnp.split(gates.astype(jnp.float32), 3, axis=-1)
+    f_pre = f_pre + 1.0  # forget-gate bias toward remembering
+
+    def heads(t):  # (B, S, d) -> (S, B, H, hd) scan-major
+        return t.reshape(b, s, nh, hd).transpose(1, 0, 2, 3).astype(jnp.float32)
+
+    qs, ks, vs = heads(q), heads(k), heads(v)
+    ig = i_pre.reshape(b, s, nh).transpose(1, 0, 2)
+    fg = f_pre.reshape(b, s, nh).transpose(1, 0, 2)
+
+    sd = jnp.dtype(cfg.rnn_state_dtype)
+    if state is None:
+        state = (jnp.zeros((b, nh, hd, hd), sd),
+                 jnp.zeros((b, nh, hd), sd),
+                 jnp.full((b, nh), -jnp.inf, jnp.float32))
+    else:
+        state = (state[0].astype(sd), state[1].astype(sd), state[2])
+    state, hs = lax.scan(_mlstm_step, state, (qs, ks, vs, ig, fg),
+                         unroll=min(unroll_for('time'), s))
+    state = (state[0].astype(jnp.float32), state[1].astype(jnp.float32),
+             state[2])
+    h = hs.transpose(1, 0, 2, 3).reshape(b, s, d)
+    h = h * jax.nn.sigmoid(o_pre.reshape(b, s, nh)).repeat(hd, axis=-1)
+    y = dense(ctx, "wo", h.astype(x.dtype), d, cfg, axes=("heads", "embed"))
+    return y, state
+
+
+# ---------------------------------------------------------------------------
+# sLSTM: scalar memory per unit, exponential gating, block-diag recurrence
+# ---------------------------------------------------------------------------
+
+def _slstm_step(state, inputs, r_z, r_i, r_f, r_o, nh, hd):
+    c, n, m, h_prev = state
+    z_x, i_x, f_x, o_x = inputs  # (B, H, hd) pre-activations from input
+
+    def rec(r, hp):  # block-diagonal recurrent matmul per head
+        return jnp.einsum("bhi,hij->bhj", hp, r)
+
+    z = jnp.tanh(z_x + rec(r_z, h_prev))
+    i_pre = i_x + rec(r_i, h_prev)
+    f_pre = f_x + rec(r_f, h_prev) + 1.0
+    o = jax.nn.sigmoid(o_x + rec(r_o, h_prev))
+    m_new = jnp.maximum(f_pre + m, i_pre)
+    i_g = jnp.exp(i_pre - m_new)
+    f_g = jnp.exp(f_pre + m - m_new)
+    c = f_g * c + i_g * z
+    n = f_g * n + i_g
+    h = o * c / jnp.maximum(n, 1.0)
+    return (c, n, m_new, h), h
+
+
+def slstm_cell(ctx: Ctx, x: jnp.ndarray, cfg: ArchConfig, state=None):
+    b, s, d = x.shape
+    nh = cfg.n_heads
+    hd = d // nh
+    zx = dense(ctx, "wz", x, d, cfg, axes=("embed", "heads"))
+    ix = dense(ctx, "wi", x, d, cfg, axes=("embed", "heads"))
+    fx = dense(ctx, "wf", x, d, cfg, axes=("embed", "heads"))
+    ox = dense(ctx, "wo_in", x, d, cfg, axes=("embed", "heads"))
+    rs = {nm: ctx.param(f"r_{nm}", (nh, hd, hd), "float32",
+                        axes=("heads", None, None))
+          for nm in ("z", "i", "f", "o")}
+
+    def to_sbh(t):
+        return t.reshape(b, s, nh, hd).transpose(1, 0, 2, 3).astype(jnp.float32)
+
+    if state is None:
+        z0 = jnp.zeros((b, nh, hd), jnp.float32)
+        state = (z0, z0, jnp.full((b, nh, hd), -jnp.inf, jnp.float32), z0)
+    step = functools.partial(_slstm_step, r_z=rs["z"], r_i=rs["i"],
+                             r_f=rs["f"], r_o=rs["o"], nh=nh, hd=hd)
+    state, hs = lax.scan(lambda st, ins: step(st, ins), state,
+                         (to_sbh(zx), to_sbh(ix), to_sbh(fx), to_sbh(ox)),
+                         unroll=min(unroll_for('time_s'), s))
+    h = hs.transpose(1, 0, 2, 3).reshape(b, s, d).astype(x.dtype)
+    y = dense(ctx, "w_down", h, d, cfg, axes=("heads", "embed"))
+    return y, state
+
+
+# ---------------------------------------------------------------------------
+# Blocks + model
+# ---------------------------------------------------------------------------
+
+def xlstm_block(ctx: Ctx, cfg: ArchConfig, x, *, kind: str, state=None):
+    cell = mlstm_cell if kind == "mlstm" else slstm_cell
+    with ctx.scope(kind):
+        h, new_state = cell(ctx, norm(ctx, "ln", x, cfg), cfg, state=state)
+    x = x + h
+    return constrain(x, ("act_batch", "act_seq", "act_embed")), new_state
+
+
+class XLSTMModel:
+    """Blocks: 1 sLSTM per ``slstm_every`` blocks (xLSTM[7:1] for 1.3b),
+    mLSTM otherwise. Two stacked scans keep HLO compact."""
+
+    def __init__(self, cfg: ArchConfig):
+        self.cfg = cfg
+        every = cfg.slstm_every or (cfg.n_layers + 1)
+        self.kinds = ["slstm" if (i + 1) % every == 0 else "mlstm"
+                      for i in range(cfg.n_layers)]
+        self.n_m = self.kinds.count("mlstm")
+        self.n_s = self.kinds.count("slstm")
+
+    def init(self, rng, *, abstract: bool = False):
+        cfg = self.cfg
+
+        def build(rng_):
+            km, ks, ke = jax.random.split(rng_, 3)
+            params, axes = {}, {}
+            ctx = Ctx("init", rng=ke)
+            embed(ctx, jnp.zeros((1, 1), jnp.int32), cfg)
+            x0 = jnp.zeros((1, 1, cfg.d_model), cfg.compute_dtype)
+            norm(ctx, "final_ln", x0, cfg)
+            unembed(ctx, x0, cfg)
+            params.update(ctx.params)
+            axes.update(ctx.axes)
+            mp, ma = stacked_init(
+                lambda c, xx: xlstm_block(c, cfg, xx, kind="mlstm"),
+                km, max(self.n_m, 1), x0)
+            params["mlstm_blocks"] = mp
+            axes.update({("mlstm_blocks",) + p: a for p, a in ma.items()})
+            if self.n_s:
+                sp, sa = stacked_init(
+                    lambda c, xx: xlstm_block(c, cfg, xx, kind="slstm"),
+                    ks, self.n_s, x0)
+                params["slstm_blocks"] = sp
+                axes.update({("slstm_blocks",) + p: a for p, a in sa.items()})
+            return params, axes
+
+        if abstract:
+            holder = {}
+
+            def f(r):
+                p, a = build(r)
+                holder.update(a)
+                return p
+
+            return jax.eval_shape(f, rng), holder
+        return build(rng)
+
+    def _run(self, params, x, states=None):
+        """Apply blocks in kind order; states: dict of stacked states or None."""
+        cfg = self.cfg
+        new_m, new_s = None, None
+
+        def m_fn(c, xx, cache=None):
+            xx, st = xlstm_block(c, cfg, xx, kind="mlstm", state=cache)
+            return xx, st, jnp.zeros((), jnp.float32)
+
+        def s_fn(c, xx, cache=None):
+            xx, st = xlstm_block(c, cfg, xx, kind="slstm", state=cache)
+            return xx, st, jnp.zeros((), jnp.float32)
+
+        # homogeneous interleave: run contiguous mlstm groups then the slstm
+        mp, sp = params["mlstm_blocks"], params.get("slstm_blocks")
+        every = cfg.slstm_every or (cfg.n_layers + 1)
+        group = every - 1  # mlstm blocks per slstm
+        mi, si = 0, 0
+        new_m_parts, new_s_parts = [], []
+        i = 0
+        while i < cfg.n_layers:
+            n_m_here = min(group if self.n_s else cfg.n_layers,
+                           self.n_m - mi)
+            if n_m_here > 0:
+                sub = jax.tree.map(lambda p: p[mi:mi + n_m_here], mp)
+                subc = (None if states is None else jax.tree.map(
+                    lambda t: t[mi:mi + n_m_here], states["mlstm"]))
+                x, nc, _ = scan_layers(m_fn, sub, x, cache=subc,
+                                       remat=cfg.remat if states is None
+                                       else "none")
+                if nc is not None:
+                    new_m_parts.append(nc)
+                mi += n_m_here
+                i += n_m_here
+            if self.n_s and si < self.n_s and i < cfg.n_layers:
+                pslice = jax.tree.map(lambda p: p[si], sp)
+                st = (None if states is None else jax.tree.map(
+                    lambda t: t[si], states["slstm"]))
+                x, nst = apply_model(
+                    lambda c, xx: xlstm_block(c, cfg, xx, kind="slstm",
+                                              state=st), pslice, x)
+                new_s_parts.append(nst)
+                si += 1
+                i += 1
+        new_states = None
+        if states is not None:
+            new_states = {
+                "mlstm": jax.tree.map(lambda *t: jnp.concatenate(t, 0),
+                                      *new_m_parts),
+            }
+            if new_s_parts:
+                new_states["slstm"] = jax.tree.map(
+                    lambda *t: jnp.stack(t, 0), *new_s_parts)
+        return x, new_states
+
+    def forward(self, params, batch):
+        ctx = Ctx("apply", params=params)
+        x = embed(ctx, batch["tokens"], self.cfg)
+        x, _ = self._run(params, x)
+        x = norm(ctx, "final_ln", x, self.cfg)
+        return unembed(ctx, x, self.cfg), jnp.zeros((), jnp.float32)
+
+    def init_cache(self, batch_size: int, max_seq: int, *,
+                   abstract: bool = False):
+        cfg = self.cfg
+        nh = cfg.n_heads
+        hd = cfg.d_model // nh
+
+        def mk(shape, fill=0.0):
+            if abstract:
+                return jax.ShapeDtypeStruct(shape, jnp.float32)
+            return jnp.full(shape, fill, jnp.float32)
+
+        cache = {
+            "mlstm": (mk((self.n_m, batch_size, nh, hd, hd)),
+                      mk((self.n_m, batch_size, nh, hd)),
+                      mk((self.n_m, batch_size, nh), -jnp.inf if not abstract
+                         else 0.0)),
+            "pos": (jax.ShapeDtypeStruct((), jnp.int32) if abstract
+                    else jnp.zeros((), jnp.int32)),
+        }
+        if self.n_s:
+            z = mk((self.n_s, batch_size, nh, hd))
+            cache["slstm"] = (z, z, mk((self.n_s, batch_size, nh, hd),
+                                       -jnp.inf if not abstract else 0.0), z)
+        return cache
+
+    def decode_step(self, params, tokens, cache):
+        ctx = Ctx("apply", params=params)
+        x = embed(ctx, tokens, self.cfg)
+        states = {k: v for k, v in cache.items() if k != "pos"}
+        x, new_states = self._run(params, x, states=states)
+        x = norm(ctx, "final_ln", x, self.cfg)
+        logits = unembed(ctx, x, self.cfg)
+        new_states["pos"] = cache["pos"] + 1
+        return logits, new_states

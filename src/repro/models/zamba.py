@@ -1,0 +1,269 @@
+"""Zamba2-style hybrid: Mamba2 (SSD) backbone + a *shared* attention block
+applied every ``shared_attn_every`` Mamba blocks (arXiv:2411.15242).
+
+Mamba2 head-structured SSD with scalar-per-head decay, state N=ssm_state.
+Training lowers a time scan (chunkwise SSD is a §Perf candidate); decode
+carries (conv_state, ssm_state) — O(1) per token, so long_500k runs. The
+shared attention block uses a sliding window at long context (DESIGN.md §4)
+with the ring-buffer KV cache from layers.py.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax import lax
+
+from repro.parallel.sharding import constrain
+from repro.parallel.unroll import unroll_for
+
+from .common import ArchConfig
+from .layers import dense, embed, norm, self_attention, unembed, mlp
+from .module import Ctx, apply_model, ones_init, zeros_init
+from .transformer import scan_layers, stacked_init
+
+
+# ---------------------------------------------------------------------------
+# Mamba2 block
+# ---------------------------------------------------------------------------
+
+def _ssd_step(state, inputs):
+    """state S: (B, H, P, N). inputs: x (B,H,P), dt (B,H), B_ (B,N), C (B,N),
+    a_log (H,)."""
+    S, a_log = state
+    x, dt, B_, C = inputs
+    a = jnp.exp(-jnp.exp(a_log)[None, :] * dt)          # (B, H) decay
+    S = S * a[..., None, None] + (dt[..., None] * x)[..., None] * B_[:, None, None, :]
+    y = jnp.einsum("bhpn,bn->bhp", S, C)
+    return (S, a_log), y
+
+
+def mamba_block(ctx: Ctx, cfg: ArchConfig, x, *, state: Optional[dict] = None):
+    """x: (B, S, d). state (decode): {'conv': (B, K-1, d_in), 'ssm': (B,H,P,N)}."""
+    b, s, d = x.shape
+    d_in = cfg.d_inner
+    nheads = cfg.ssm_heads
+    p = d_in // nheads
+    n = cfg.ssm_state
+    kconv = cfg.conv_kernel
+
+    with ctx.scope("mamba"):
+        y_in = norm(ctx, "ln", x, cfg)
+        xz = dense(ctx, "in_proj", y_in, 2 * d_in, cfg, axes=("embed", "mlp"))
+        xs, z = jnp.split(xz, 2, axis=-1)
+
+        # causal depthwise conv over seq
+        wconv = ctx.param("conv_w", (kconv, 1, d_in), cfg.param_dtype,
+                          axes=("conv", None, "mlp"))
+        new_conv_state = None
+        if state is None:
+            xpad = jnp.pad(xs, ((0, 0), (kconv - 1, 0), (0, 0)))
+        else:
+            xpad = jnp.concatenate([state["conv"].astype(xs.dtype), xs], axis=1)
+            new_conv_state = xpad[:, -(kconv - 1):, :]
+        xc = lax.conv_general_dilated(
+            xpad, wconv.astype(xs.dtype), (1,), "VALID",
+            dimension_numbers=("NHC", "HIO", "NHC"),
+            feature_group_count=d_in)
+        xc = jax.nn.silu(xc)
+
+        # SSD projections
+        bc = dense(ctx, "bc_proj", xc, 2 * n, cfg, axes=("mlp", "ssm"))
+        B_, C_ = jnp.split(bc.astype(jnp.float32), 2, axis=-1)  # (B,S,N)
+        dt = dense(ctx, "dt_proj", xc, nheads, cfg, axes=("mlp", "heads"))
+        dt = jax.nn.softplus(dt.astype(jnp.float32) + 1.0)       # (B,S,H)
+        a_log = ctx.param("a_log", (nheads,), "float32", zeros_init(),
+                          axes=("heads",))
+        d_skip = ctx.param("d_skip", (nheads,), "float32", ones_init(),
+                           axes=("heads",))
+
+        xh = xc.reshape(b, s, nheads, p).astype(jnp.float32)
+        if state is None:
+            S0 = jnp.zeros((b, nheads, p, n), jnp.float32)
+        else:
+            S0 = state["ssm"]
+        scan_in = (xh.transpose(1, 0, 2, 3),          # (S,B,H,P)
+                   dt.transpose(1, 0, 2),              # (S,B,H)
+                   B_.transpose(1, 0, 2),              # (S,B,N)
+                   C_.transpose(1, 0, 2))              # (S,B,N)
+        (S_fin, _), ys = lax.scan(_ssd_step, (S0, a_log), scan_in,
+                                  unroll=min(unroll_for('time'), s))
+        y = ys.transpose(1, 0, 2, 3)                   # (B,S,H,P)
+        y = y + xh * d_skip[None, None, :, None]
+        y = y.reshape(b, s, d_in).astype(x.dtype)
+        y = y * jax.nn.silu(z)
+        out = dense(ctx, "out_proj", y, d, cfg, axes=("mlp", "embed"))
+
+    x = x + out
+    x = constrain(x, ("act_batch", "act_seq", "act_embed"))
+    new_state = None
+    if state is not None:
+        new_state = {"conv": new_conv_state.astype(jnp.float32),
+                     "ssm": S_fin}
+    return x, new_state
+
+
+def shared_attn_block(ctx: Ctx, cfg: ArchConfig, x, *, positions, cache=None):
+    """The Zamba shared transformer block (params reused at every site)."""
+    with ctx.scope("attn"):
+        h, new_cache = self_attention(ctx, norm(ctx, "ln1", x, cfg), cfg,
+                                      positions=positions, cache=cache)
+    x = x + h
+    with ctx.scope("ffn"):
+        x = x + mlp(ctx, norm(ctx, "ln2", x, cfg), cfg)
+    return constrain(x, ("act_batch", "act_seq", "act_embed")), new_cache
+
+
+class ZambaModel:
+    def __init__(self, cfg: ArchConfig):
+        self.cfg = cfg
+        self.every = cfg.shared_attn_every
+        self.n_sites = cfg.n_layers // self.every if self.every else 0
+
+    def init(self, rng, *, abstract: bool = False):
+        cfg = self.cfg
+
+        def build(rng_):
+            km, ka, ke = jax.random.split(rng_, 3)
+            params, axes = {}, {}
+            ctx = Ctx("init", rng=ke)
+            embed(ctx, jnp.zeros((1, 1), jnp.int32), cfg)
+            x0 = jnp.zeros((1, 1, cfg.d_model), cfg.compute_dtype)
+            norm(ctx, "final_ln", x0, cfg)
+            unembed(ctx, x0, cfg)
+            params.update(ctx.params)
+            axes.update(ctx.axes)
+            mp, ma = stacked_init(
+                lambda c, xx: mamba_block(c, cfg, xx), km, cfg.n_layers, x0)
+            params["mamba_blocks"] = mp
+            axes.update({("mamba_blocks",) + p: a for p, a in ma.items()})
+            if self.n_sites:
+                ctx2 = Ctx("init", rng=ka)
+                shared_attn_block(ctx2, cfg, x0,
+                                  positions=jnp.zeros((1,), jnp.int32))
+                params["shared_attn"] = ctx2.params
+                axes.update({("shared_attn",) + p: a
+                             for p, a in ctx2.axes.items()})
+            return params, axes
+
+        if abstract:
+            holder = {}
+
+            def f(r):
+                p, a = build(r)
+                holder.update(a)
+                return p
+
+            return jax.eval_shape(f, rng), holder
+        return build(rng)
+
+    def _mamba_fn(self):
+        cfg = self.cfg
+
+        def fn(c, xx, cache=None):
+            xx, st = mamba_block(c, cfg, xx, state=cache)
+            return xx, st, jnp.zeros((), jnp.float32)
+
+        return fn
+
+    def forward(self, params, batch):
+        cfg = self.cfg
+        tokens = batch["tokens"]
+        positions = jnp.arange(tokens.shape[1])
+        ctx = Ctx("apply", params=params)
+        x = embed(ctx, tokens, cfg)
+        fn = self._mamba_fn()
+        mp = params["mamba_blocks"]
+        if not self.n_sites:
+            x, _, _ = scan_layers(fn, mp, x, remat=cfg.remat)
+        else:
+            for site in range(self.n_sites):
+                sub = jax.tree.map(
+                    lambda p: p[site * self.every:(site + 1) * self.every], mp)
+                x, _, _ = scan_layers(fn, sub, x, remat=cfg.remat)
+                x, _ = apply_model(
+                    lambda c, xx: shared_attn_block(c, cfg, xx,
+                                                    positions=positions),
+                    params["shared_attn"], x)
+            # tail blocks beyond the last shared-attn site (38 = 6x6 + 2)
+            tail0 = self.n_sites * self.every
+            if tail0 < cfg.n_layers:
+                sub = jax.tree.map(lambda t: t[tail0:], mp)
+                x, _, _ = scan_layers(fn, sub, x, remat=cfg.remat)
+        x = norm(ctx, "final_ln", x, cfg)
+        return unembed(ctx, x, cfg), jnp.zeros((), jnp.float32)
+
+    def init_cache(self, batch_size: int, max_seq: int, *,
+                   abstract: bool = False):
+        cfg = self.cfg
+        p = cfg.d_inner // cfg.ssm_heads
+        ring = bool(cfg.window) and cfg.window < max_seq
+        size = min(cfg.window, max_seq) if ring else max_seq
+
+        def mk(shape, dtype=jnp.float32, fill=0):
+            if abstract:
+                return jax.ShapeDtypeStruct(shape, dtype)
+            return jnp.full(shape, fill, dtype)
+
+        cache = {
+            "conv": mk((cfg.n_layers, batch_size, cfg.conv_kernel - 1,
+                        cfg.d_inner)),
+            "ssm": mk((cfg.n_layers, batch_size, cfg.ssm_heads, p,
+                       cfg.ssm_state)),
+            "pos": mk((), jnp.int32),
+        }
+        dt = jnp.dtype(cfg.compute_dtype)
+        for site in range(self.n_sites):
+            c = {
+                "k": mk((batch_size, size, cfg.kv_heads, cfg.head_dim), dt),
+                "v": mk((batch_size, size, cfg.kv_heads, cfg.head_dim), dt),
+            }
+            if ring:
+                c["abs_pos"] = mk((size,), jnp.int32, fill=-1)
+            cache[f"attn_{site}"] = c
+        return cache
+
+    def decode_step(self, params, tokens, cache):
+        cfg = self.cfg
+        pos = cache["pos"]
+        positions = jnp.reshape(pos, (1,))
+        ctx = Ctx("apply", params=params)
+        x = embed(ctx, tokens, cfg)
+        fn = self._mamba_fn()
+        mp = params["mamba_blocks"]
+        mamba_state = {"conv": cache["conv"], "ssm": cache["ssm"]}
+        new_cache = dict(cache)
+        if not self.n_sites:
+            x, ns, _ = scan_layers(fn, mp, x, cache=mamba_state)
+            new_cache.update(ns)
+        else:
+            parts = []
+            for site in range(self.n_sites):
+                lo, hi = site * self.every, (site + 1) * self.every
+                sub = jax.tree.map(lambda t: t[lo:hi], mp)
+                subc = jax.tree.map(lambda t: t[lo:hi], mamba_state)
+                x, ns, _ = scan_layers(fn, sub, x, cache=subc)
+                parts.append(ns)
+                ac = dict(cache[f"attn_{site}"], pos=pos)
+                x, nac = apply_model(
+                    lambda c, xx: shared_attn_block(c, cfg, xx,
+                                                    positions=positions,
+                                                    cache=ac),
+                    params["shared_attn"], x)
+                nac.pop("pos")
+                new_cache[f"attn_{site}"] = nac
+            # tail blocks (38 = 6x6 + 2)
+            tail0 = self.n_sites * self.every
+            if tail0 < cfg.n_layers:
+                sub = jax.tree.map(lambda t: t[tail0:], mp)
+                subc = jax.tree.map(lambda t: t[tail0:], mamba_state)
+                x, ns, _ = scan_layers(fn, sub, x, cache=subc)
+                parts.append(ns)
+            merged = jax.tree.map(lambda *t: jnp.concatenate(t, 0), *parts)
+            new_cache.update(merged)
+        x = norm(ctx, "final_ln", x, cfg)
+        logits = unembed(ctx, x, cfg)
+        new_cache["pos"] = pos + 1
+        return logits, new_cache

@@ -1,0 +1,7 @@
+from .adamw import AdamWConfig, AdamWState, abstract_state, apply_updates, init_state, state_axes
+from .schedule import cosine_with_warmup, linear_warmup
+from .grad_compress import compressed_psum, quantize_int8
+
+__all__ = ["AdamWConfig", "AdamWState", "abstract_state", "apply_updates",
+           "init_state", "state_axes", "cosine_with_warmup", "linear_warmup",
+           "compressed_psum", "quantize_int8"]

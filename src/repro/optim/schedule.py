@@ -1,0 +1,17 @@
+"""LR schedules (pure functions of the step counter)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def cosine_with_warmup(step, *, warmup: int = 1000, total: int = 100_000,
+                       min_ratio: float = 0.1):
+    step = step.astype(jnp.float32)
+    warm = jnp.minimum(step / max(warmup, 1), 1.0)
+    progress = jnp.clip((step - warmup) / max(total - warmup, 1), 0.0, 1.0)
+    cos = min_ratio + (1 - min_ratio) * 0.5 * (1 + jnp.cos(jnp.pi * progress))
+    return warm * cos
+
+
+def linear_warmup(step, *, warmup: int = 1000):
+    return jnp.minimum(step.astype(jnp.float32) / max(warmup, 1), 1.0)

@@ -1,0 +1,180 @@
+"""Logical-axis sharding rules (DP / FSDP / TP / EP / SP).
+
+Parameters and activations are annotated with *logical* axis names; a
+:class:`Sharder` maps them onto mesh axes with automatic divisibility
+fallback (an axis that does not divide the dimension is dropped rather than
+erroring — e.g. 4 KV heads on a 16-way model axis degrade to replication,
+which is exactly the production behavior we want to surface in the roofline,
+not hide behind a crash).
+
+The active sharder is ambient (context manager) so model code can sprinkle
+``constrain(x, ("act_batch", "act_seq", "act_embed"))`` without plumbing a
+mesh through every call — outside a mesh context it is a no-op, which keeps
+single-device smoke tests untouched.
+"""
+from __future__ import annotations
+
+import contextlib
+import threading
+from typing import Dict, Optional, Sequence, Tuple, Union
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+AxisRule = Union[None, str, Tuple[str, ...]]
+
+# ---------------------------------------------------------------------------
+# Rule tables
+# ---------------------------------------------------------------------------
+
+def base_rules(multi_pod: bool, *, seq_sharded_cache: bool = False,
+               sp_activations: bool = False,
+               serve: bool = False) -> Dict[str, AxisRule]:
+    """Default production rules.
+
+    Weights: 2-D sharded — 'fsdp'-tagged dims over the data(+pod) axes
+    (ZeRO-3), 'model'-tagged dims over the tensor axis.
+    Activations: batch over data(+pod), heads/vocab/experts over model.
+    ``seq_sharded_cache`` moves the decode KV cache's sequence dim onto the
+    model axis (ring-free sequence sharding — see EXPERIMENTS.md §Perf).
+    ``sp_activations`` shards the token dim of norm/elementwise regions over
+    the model axis (Megatron-style sequence parallelism).
+    """
+    dp: Tuple[str, ...] = ("pod", "data") if multi_pod else ("data",)
+    if serve:
+        # Decode-optimized: weights stay 2-D sharded (embed x model), but the
+        # ACTIVATION model dim is sharded over the data axis too, so dense
+        # layers contract locally and psum tiny (tokens x out) partials
+        # instead of all-gathering whole weight matrices every step
+        # (EXPERIMENTS.md perf log, nemotron decode: 369 GB -> MBs of wire).
+        return {
+            "embed": dp, "heads": "model", "kv_heads": "model",
+            "mlp": "model", "vocab": "model", "expert": "model",
+            "expert_mlp": None, "layers": None, "conv": None, "ssm": None,
+            "act_batch": None,          # decode batch is tiny; replicate
+            "act_seq": None,
+            "act_embed": dp,            # contraction-sharded activations
+            "act_heads": "model",
+            "act_kv_heads": "model",
+            "act_mlp": "model",
+            "act_vocab": "model",
+            "act_expert": "model",
+            "cache_seq": "model" if seq_sharded_cache else None,
+            "cache_batch": dp,
+            "frames": None,
+        }
+    rules: Dict[str, AxisRule] = {
+        # weight dims
+        "embed": dp,          # FSDP shard of the contraction dim
+        "heads": "model",
+        "kv_heads": "model",  # degrades to None when not divisible
+        "mlp": "model",
+        "vocab": "model",
+        "expert": "model",
+        "expert_mlp": None,
+        "layers": None,
+        "conv": None,
+        "ssm": None,
+        # activation dims
+        "act_batch": dp,
+        "act_seq": "model" if sp_activations else None,
+        "act_embed": None,
+        "act_heads": "model",
+        "act_kv_heads": "model",
+        "act_mlp": "model",
+        "act_vocab": "model",
+        "act_expert": "model",
+        "cache_seq": "model" if seq_sharded_cache else None,
+        "cache_batch": dp,
+        "frames": None,
+    }
+    return rules
+
+
+# ---------------------------------------------------------------------------
+# Sharder
+# ---------------------------------------------------------------------------
+
+class Sharder:
+    def __init__(self, mesh: Mesh, rules: Dict[str, AxisRule]):
+        self.mesh = mesh
+        self.rules = dict(rules)
+        self._axis_sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+
+    def _axes_for(self, name: Optional[str]) -> Tuple[str, ...]:
+        if name is None:
+            return ()
+        rule = self.rules.get(name, None)
+        if rule is None:
+            return ()
+        if isinstance(rule, str):
+            rule = (rule,)
+        return tuple(a for a in rule if a in self._axis_sizes)
+
+    def spec(self, logical_axes: Sequence[Optional[str]],
+             shape: Optional[Sequence[int]] = None) -> P:
+        """PartitionSpec for a tensor with the given logical axes.
+
+        With ``shape`` provided, axes that do not divide the dim are dropped
+        (partial tuples are trimmed greedily from the right).
+        """
+        parts = []
+        used = set()
+        for d, name in enumerate(logical_axes):
+            axes = tuple(a for a in self._axes_for(name) if a not in used)
+            if shape is not None and axes:
+                dim = shape[d]
+                while axes and dim % int(np.prod([self._axis_sizes[a] for a in axes])) != 0:
+                    axes = axes[:-1]
+            used.update(axes)
+            if not axes:
+                parts.append(None)
+            elif len(axes) == 1:
+                parts.append(axes[0])
+            else:
+                parts.append(axes)
+        while parts and parts[-1] is None:
+            parts.pop()
+        return P(*parts)
+
+    def sharding(self, logical_axes, shape=None) -> NamedSharding:
+        return NamedSharding(self.mesh, self.spec(logical_axes, shape))
+
+    def constrain(self, x, logical_axes):
+        return jax.lax.with_sharding_constraint(
+            x, NamedSharding(self.mesh, self.spec(logical_axes, x.shape)))
+
+
+_tls = threading.local()
+
+
+def current_sharder() -> Optional[Sharder]:
+    return getattr(_tls, "sharder", None)
+
+
+@contextlib.contextmanager
+def use_sharder(sharder: Optional[Sharder]):
+    prev = current_sharder()
+    _tls.sharder = sharder
+    try:
+        yield sharder
+    finally:
+        _tls.sharder = prev
+
+
+def constrain(x, logical_axes: Sequence[Optional[str]]):
+    """Ambient sharding constraint; identity when no sharder is active."""
+    s = current_sharder()
+    if s is None:
+        return x
+    return s.constrain(x, logical_axes)
+
+
+def tree_shardings(sharder: Sharder, params, axes_tree_):
+    """Pytree of NamedShardings for a param tree + congruent axes tree."""
+    # tree structure follows ``params``; the congruent axes-tuple node is
+    # handed to the mapper whole (flatten_up_to semantics).
+    return jax.tree.map(
+        lambda p, a: sharder.sharding(a, getattr(p, "shape", None)),
+        params, axes_tree_)

@@ -1,0 +1,59 @@
+"""Checkpoint atomicity / resume / elastic-restore tests."""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import checkpoint as ckpt
+
+
+@pytest.fixture()
+def tree():
+    return {"a": jnp.arange(6, dtype=jnp.float32).reshape(2, 3),
+            "nested": {"b": jnp.ones((4,), jnp.bfloat16),
+                       "step": jnp.int32(7)}}
+
+
+def test_roundtrip(tmp_path, tree):
+    ckpt.save(str(tmp_path), 3, tree)
+    assert ckpt.latest_step(str(tmp_path)) == 3
+    out = ckpt.restore(str(tmp_path), 3, tree)
+    for a, b in zip(jax.tree.leaves(tree), jax.tree.leaves(out)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+        assert a.dtype == b.dtype
+
+
+def test_incomplete_checkpoint_ignored(tmp_path, tree):
+    ckpt.save(str(tmp_path), 1, tree)
+    ckpt.save(str(tmp_path), 2, tree)
+    # simulate a crash mid-write on step 2: delete the sentinel
+    os.remove(str(tmp_path / "step_00000002" / ckpt.SENTINEL))
+    assert ckpt.latest_step(str(tmp_path)) == 1
+    with pytest.raises(FileNotFoundError):
+        ckpt.restore(str(tmp_path), 2, tree)
+
+
+def test_missing_key_detected(tmp_path, tree):
+    ckpt.save(str(tmp_path), 1, tree)
+    bigger = dict(tree, extra=jnp.zeros((2,)))
+    with pytest.raises(ValueError):
+        ckpt.restore(str(tmp_path), 1, bigger)
+
+
+def test_cleanup_keeps_newest(tmp_path, tree):
+    for s in (1, 2, 3, 4, 5):
+        ckpt.save(str(tmp_path), s, tree)
+    ckpt.cleanup(str(tmp_path), keep=2)
+    assert ckpt.latest_step(str(tmp_path)) == 5
+    remaining = sorted(os.listdir(tmp_path))
+    assert remaining == ["step_00000004", "step_00000005"]
+
+
+def test_overwrite_same_step(tmp_path, tree):
+    ckpt.save(str(tmp_path), 1, tree)
+    tree2 = jax.tree.map(lambda x: x * 0, tree)
+    ckpt.save(str(tmp_path), 1, tree2)
+    out = ckpt.restore(str(tmp_path), 1, tree)
+    assert float(np.asarray(out["a"]).sum()) == 0.0

@@ -1,0 +1,221 @@
+"""Bit-level unit + property tests for the DAISM multiplier family."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import Variant, error_distance
+from repro.core.bitops import exact_mul_planes
+from repro.core.multiplier import (approx_mul_int_signmag, approx_mul_uint,
+                                   approx_mul_uint_planes)
+
+VARIANTS = [Variant.FLA, Variant.HLA, Variant.PC2, Variant.PC3,
+            Variant.PC2_TR, Variant.PC3_TR]
+
+
+def _fla_oracle(a, b, n=8):
+    out = np.zeros_like(a)
+    for i in range(n):
+        out |= np.where((b >> i) & 1 == 1, a << i, 0)
+    return out
+
+
+@pytest.fixture(scope="module")
+def pairs():
+    rng = np.random.default_rng(0)
+    a = rng.integers(0, 256, (4000,)).astype(np.int32)
+    b = rng.integers(0, 256, (4000,)).astype(np.int32)
+    return jnp.asarray(a), jnp.asarray(b), a, b
+
+
+def test_fla_matches_numpy_oracle(pairs):
+    ja, jb, a, b = pairs
+    got = np.asarray(approx_mul_uint(ja, jb, 8, Variant.FLA))
+    np.testing.assert_array_equal(got, _fla_oracle(a, b))
+
+
+def test_ordering_fla_hla_exact(pairs):
+    """max(p_i) <= FLA <= HLA <= exact (paper §3.1/3.2)."""
+    ja, jb, a, b = pairs
+    fla = np.asarray(approx_mul_uint(ja, jb, 8, Variant.FLA))
+    hla = np.asarray(approx_mul_uint(ja, jb, 8, Variant.HLA))
+    exact = a * b
+    assert (fla <= hla).all()
+    assert (hla <= exact).all()
+    # FLA >= the largest selected partial product
+    maxp = np.zeros_like(a)
+    for i in range(8):
+        maxp = np.maximum(maxp, np.where((b >> i) & 1 == 1, a << i, 0))
+    assert (fla >= maxp).all()
+
+
+def test_fla_is_symmetric(pairs):
+    ja, jb, *_ = pairs
+    f1 = np.asarray(approx_mul_uint(ja, jb, 8, Variant.FLA))
+    f2 = np.asarray(approx_mul_uint(jb, ja, 8, Variant.FLA))
+    np.testing.assert_array_equal(f1, f2)
+
+
+def test_exact_when_single_bit_multiplicand(pairs):
+    """Paper: multiplicand 64 (1000000) never collides => FLA exact."""
+    _, jb, _, b = pairs
+    a64 = jnp.full_like(jb, 64)
+    got = np.asarray(approx_mul_uint(a64, jb, 8, Variant.FLA))
+    np.testing.assert_array_equal(got, 64 * b)
+
+
+@pytest.mark.parametrize("variant", VARIANTS)
+def test_upper_bound_and_truncation(pairs, variant):
+    # msb_always_set is the float-mantissa mode: only valid for b >= 128
+    # (the implicit leading 1); restrict operands to that domain.
+    ja, jb, a, b = pairs
+    ja = (ja | 128)
+    jb = (jb | 128)
+    a, b = a | 128, b | 128
+    full = np.asarray(approx_mul_uint(ja, jb, 8, variant,
+                                      msb_always_set=True))
+    assert (full <= a * b).all(), "approx must never exceed exact"
+    if variant.truncated:
+        assert (full & 0xFF).max() == 0, "truncated: low columns must be 0"
+        base = np.asarray(approx_mul_uint(ja, jb, 8, variant.base,
+                                          msb_always_set=True))
+        if variant.base is not Variant.HLA:
+            np.testing.assert_array_equal(full, base & (0xFF << 8))
+
+
+@pytest.mark.parametrize("variant", VARIANTS)
+def test_planes_consistent_with_single_word(pairs, variant):
+    ja, jb, *_ = pairs
+    hi, lo = approx_mul_uint_planes(ja, jb, 8, variant, msb_always_set=True)
+    single = np.asarray(approx_mul_uint(ja, jb, 8, variant,
+                                        msb_always_set=True))
+    np.testing.assert_array_equal(np.asarray(hi) * 256 + np.asarray(lo),
+                                  single)
+
+
+def test_exact_mul_planes_n24_vs_int64():
+    rng = np.random.default_rng(1)
+    a = rng.integers(0, 1 << 24, (2000,)).astype(np.int64)
+    b = rng.integers(0, 1 << 24, (2000,)).astype(np.int64)
+    hi, lo = exact_mul_planes(jnp.asarray(a, jnp.int32),
+                              jnp.asarray(b, jnp.int32), 24)
+    recon = np.asarray(hi, np.int64) << 24 | np.asarray(lo, np.int64)
+    np.testing.assert_array_equal(recon, a * b)
+
+
+def test_pc2_integer_drops_lsb_line():
+    """Fig 3: integer PC2 sacrifices the H line => b bit0 contributes 0."""
+    a = jnp.asarray([255], jnp.int32)
+    one = jnp.asarray([1], jnp.int32)
+    got = approx_mul_uint(a, one, 8, Variant.PC2, integer_drop_lsb=True)
+    assert int(got[0]) == 0  # only b_0 set, line dropped
+    kept = approx_mul_uint(a, one, 8, Variant.PC2, integer_drop_lsb=False)
+    assert int(kept[0]) == 255
+
+
+def test_pc_head_lines_are_exact():
+    """When only the top-k multiplier bits are set, PC-k equals exact."""
+    rng = np.random.default_rng(2)
+    a = jnp.asarray(rng.integers(0, 256, (500,)), jnp.int32)
+    for variant, topbits in ((Variant.PC2, 0b11000000),
+                             (Variant.PC3, 0b11100000)):
+        b = jnp.full_like(a, topbits)
+        got = np.asarray(approx_mul_uint(a, b, 8, variant))
+        np.testing.assert_array_equal(got, np.asarray(a) * topbits)
+
+
+def test_error_ordering_mantissa_region():
+    """Paper Table 2 driver: FLA > PC2 > PC3 error in the float regime."""
+    rng = np.random.default_rng(3)
+    ma = jnp.asarray(rng.integers(128, 256, (5000,)), jnp.int32)
+    mb = jnp.asarray(rng.integers(128, 256, (5000,)), jnp.int32)
+    exact = np.asarray(ma) * np.asarray(mb)
+    errs = {}
+    for v in (Variant.FLA, Variant.HLA, Variant.PC2, Variant.PC3):
+        approx = np.asarray(approx_mul_uint(ma, mb, 8, v,
+                                            msb_always_set=True))
+        errs[v] = np.abs(exact - approx).mean() / exact.mean()
+    assert errs[Variant.PC3] < errs[Variant.PC2] < errs[Variant.FLA]
+    assert errs[Variant.HLA] < errs[Variant.FLA]
+
+
+def test_sign_magnitude():
+    a = jnp.asarray([-5, 5, -5, 0], jnp.int32)
+    b = jnp.asarray([3, -3, -3, -7], jnp.int32)
+    got = np.asarray(approx_mul_int_signmag(a, b, 8, Variant.EXACT))
+    np.testing.assert_array_equal(got, [-15, -15, 15, 0])
+
+
+def test_error_distance_metric():
+    ed = np.asarray(error_distance(jnp.asarray([10, 0]), jnp.asarray([8, 0])))
+    np.testing.assert_allclose(ed, [0.2, 0.0])
+
+
+# ---------------------------------------------------------------------------
+# hypothesis property tests
+# ---------------------------------------------------------------------------
+
+u8 = st.integers(min_value=0, max_value=255)
+
+
+@settings(max_examples=200, deadline=None)
+@given(a=u8, b=u8)
+def test_prop_fla_bounds(a, b):
+    got = int(approx_mul_uint(jnp.int32(a), jnp.int32(b), 8, Variant.FLA))
+    assert got <= a * b
+    assert (a == 0 or b == 0) == (got == 0)
+    # bit k of FLA set iff exists i+j=k with a_j & b_i (wired-OR semantics)
+    expect = 0
+    for i in range(8):
+        if (b >> i) & 1:
+            expect |= a << i
+    assert got == expect
+
+
+@settings(max_examples=200, deadline=None)
+@given(a=u8, b=u8)
+def test_prop_hla_exact_iff_no_cross_parity_carry(a, b):
+    """HLA = OR(even) + OR(odd): exact whenever each parity class has at
+    most one active line (no intra-read collisions)."""
+    hla = int(approx_mul_uint(jnp.int32(a), jnp.int32(b), 8, Variant.HLA))
+    even_bits = [i for i in range(0, 8, 2) if (b >> i) & 1]
+    odd_bits = [i for i in range(1, 8, 2) if (b >> i) & 1]
+    if len(even_bits) <= 1 and len(odd_bits) <= 1:
+        assert hla == a * b
+
+
+@settings(max_examples=100, deadline=None)
+@given(a=st.integers(0, (1 << 24) - 1), b=st.integers(0, (1 << 24) - 1),
+       v=st.sampled_from(VARIANTS))
+def test_prop_planes_n24_bounds(a, b, v):
+    a |= 1 << 23  # mantissa domain (float mode: MSBs set)
+    b |= 1 << 23
+    hi, lo = approx_mul_uint_planes(jnp.int32(a), jnp.int32(b), 24, v,
+                                    msb_always_set=True)
+    got = (int(hi) << 24) | int(lo)
+    assert 0 <= got <= a * b
+
+
+def test_eq3_shift_normalization_fixes_small_multipliers():
+    """Paper Eq. (3), implemented beyond-paper: pre-shifting small
+    multipliers into the MSB-active region recovers PC2/PC3 accuracy."""
+    from repro.core.multiplier import approx_mul_uint_normalized
+
+    rng = np.random.default_rng(11)
+    a = jnp.asarray(rng.integers(1, 256, (3000,)), jnp.int32)
+    b = jnp.asarray(rng.integers(1, 32, (3000,)), jnp.int32)  # small
+    exact = np.asarray(a) * np.asarray(b)
+    for v in (Variant.PC2, Variant.PC3):
+        plain = np.asarray(approx_mul_uint(a, b, 8, v))
+        normd = np.asarray(approx_mul_uint_normalized(a, b, 8, v))
+        assert (normd <= exact).all()
+        e_p = np.abs(exact - plain).mean()
+        e_n = np.abs(exact - normd).mean()
+        assert e_n < 0.6 * e_p, (v, e_p, e_n)
+    # zero multiplier stays zero; exact single-bit cases stay exact
+    z = approx_mul_uint_normalized(jnp.int32(200), jnp.int32(0), 8,
+                                   Variant.PC3)
+    assert int(z) == 0
+    one = approx_mul_uint_normalized(jnp.int32(200), jnp.int32(4), 8,
+                                     Variant.PC3)
+    assert int(one) == 800  # b=4 -> single active (shifted A) line: exact
