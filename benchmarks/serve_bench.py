@@ -1,0 +1,83 @@
+"""Serving bench: continuous-batching throughput/latency, exact vs DAISM.
+
+Drives repro.serve.ServeEngine over the same synthetic mixed-length
+workload twice — once with exact MXU matmuls (deployment path) and once
+with the paper's PC3_TR approximate multiplier on the jnp backend — and
+reports decode tokens/sec plus p50/p99 step and TTFT latencies. Wall times
+on this CPU container measure *relative* variant overhead (the jnp bit-op
+backend is the reference semantics, not a fast kernel); the deployment
+trade-off on real hardware is quantified in gemm_bench.py.
+
+Standalone:  PYTHONPATH=src python benchmarks/serve_bench.py [--arch A ...]
+Harness:     PYTHONPATH=src:. python benchmarks/run.py serve_bench
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+
+
+def run(arch: str = "tinyllama_1_1b", requests: int = 6, slots: int = 2,
+        max_seq: int = 64, base_prompt: int = 8, base_gen: int = 8):
+    import jax
+
+    from repro.configs import get_config
+    from repro.core import Backend, DaismConfig, Variant
+    from repro.models.registry import build_model
+    from repro.serve import EngineConfig, ServeEngine, synthetic_requests
+
+    cfg = get_config(arch).smoke(window=0)  # slot pools need non-ring caches
+    model = build_model(cfg)
+    params, _ = model.init(jax.random.PRNGKey(0))
+
+    variants = (
+        ("exact", cfg),
+        ("pc3_tr", dataclasses.replace(
+            cfg, daism=DaismConfig(variant=Variant.PC3_TR,
+                                   backend=Backend.JNP))),
+    )
+    rows, reports = [], {}
+    for label, vcfg in variants:
+        engine = ServeEngine(build_model(vcfg), params, EngineConfig(
+            num_slots=slots, max_seq=max_seq))
+        report = engine.run(synthetic_requests(
+            requests, vcfg.vocab, base_prompt=base_prompt,
+            base_gen=base_gen))
+        reports[label] = report
+        rows.append({
+            "name": f"serve_{arch}_{label}",
+            "us_per_call": round(report.step_p50_ms * 1e3, 1),  # decode step
+            "tokens_per_s": round(report.tokens_per_s, 1),
+            "step_p99_ms": round(report.step_p99_ms, 2),
+            "ttft_p50_ms": round(report.ttft_p50_ms, 1),
+            "latency_p99_ms": round(report.latency_p99_ms, 1),
+            "joined_mid_stream": report.joined_mid_stream,
+        })
+    exact, approx = reports["exact"], reports["pc3_tr"]
+    claims = {
+        "all_requests_complete": all(
+            len(r.completed) == requests for r in reports.values()),
+        "continuous_batching_exercised": all(
+            r.joined_mid_stream >= 1 for r in reports.values()),
+        "pc3_tr_decode_slowdown_x": round(
+            exact.tokens_per_s / approx.tokens_per_s, 2)
+        if approx.tokens_per_s else None,
+    }
+    return rows, claims
+
+
+if __name__ == "__main__":
+    p = argparse.ArgumentParser()
+    p.add_argument("--arch", default="tinyllama_1_1b")
+    p.add_argument("--requests", type=int, default=6)
+    p.add_argument("--slots", type=int, default=2)
+    p.add_argument("--max-seq", type=int, default=64)
+    p.add_argument("--prompt-len", type=int, default=8)
+    p.add_argument("--gen", type=int, default=8)
+    args = p.parse_args()
+    rows, claims = run(arch=args.arch, requests=args.requests,
+                       slots=args.slots, max_seq=args.max_seq,
+                       base_prompt=args.prompt_len, base_gen=args.gen)
+    for r in rows:
+        print(r)
+    print(claims)

@@ -1,0 +1,35 @@
+"""Version-compatibility shims for the pinned jax.
+
+``jax.shard_map`` is a top-level API only on newer jax; the pinned 0.4.x
+exposes it as ``jax.experimental.shard_map.shard_map`` and spells the
+replication-check kwarg ``check_rep`` instead of ``check_vma``. Every
+shard_map call site in the repo routes through :func:`shard_map` below so
+the distributed stack (MoE expert parallelism, pipeline parallelism,
+compressed psum) runs on both spellings.
+"""
+from __future__ import annotations
+
+import inspect
+
+import jax
+
+if hasattr(jax, "shard_map"):
+    _shard_map = jax.shard_map
+else:  # jax <= 0.4.x
+    from jax.experimental.shard_map import shard_map as _shard_map
+
+_CHECK_KW = ("check_vma"
+             if "check_vma" in inspect.signature(_shard_map).parameters
+             else "check_rep")
+
+
+def shard_map(f, *, mesh, in_specs, out_specs, check_vma=None, **kw):
+    """``jax.shard_map`` with the modern keyword spelling on any jax.
+
+    ``check_vma`` (new spelling) is translated to ``check_rep`` where the
+    pinned jax still uses the old name; all other kwargs pass through.
+    """
+    if check_vma is not None:
+        kw[_CHECK_KW] = check_vma
+    return _shard_map(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                      **kw)

@@ -23,6 +23,11 @@ from jax import lax
 Planes = Tuple[jnp.ndarray, jnp.ndarray]  # (hi, lo), each int32 holding n bits
 
 
+def round_up(x: int, m: int) -> int:
+    """Smallest multiple of ``m`` >= ``x`` (shared padding helper)."""
+    return (x + m - 1) // m * m
+
+
 def _mask(n: int) -> int:
     return (1 << n) - 1
 

@@ -27,13 +27,10 @@ import jax
 import jax.numpy as jnp
 from jax import lax
 
+from .bitops import round_up as _round_up
 from .config import Backend, DaismConfig, Variant
 from .floatmul import approx_mul_to_f32
 from .lut import approx_mul_to_f32_lut
-
-
-def _round_up(x: int, m: int) -> int:
-    return (x + m - 1) // m * m
 
 
 def _product_fn(cfg: DaismConfig) -> Callable:

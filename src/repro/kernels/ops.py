@@ -6,13 +6,10 @@ import functools
 import jax
 import jax.numpy as jnp
 
+from repro.core.bitops import round_up as _round_up
 from repro.core.config import DaismConfig, Variant
 
 from .daism_matmul import daism_matmul_kernel
-
-
-def _round_up(x: int, m: int) -> int:
-    return (x + m - 1) // m * m
 
 
 def _auto_interpret(cfg: DaismConfig) -> bool:

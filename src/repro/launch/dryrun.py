@@ -194,9 +194,7 @@ def run_cell(arch: str, shape_name: str, mesh_kind: str, *,
     mem = compiled.memory_analysis()
 
     def costs_of(compiled_):
-        cost = compiled_.cost_analysis()
-        if isinstance(cost, list):
-            cost = cost[0]
+        cost = ra.xla_cost(compiled_)
         stats = ra.collective_bytes_from_hlo(compiled_.as_text(), n_chips)
         return (float(cost.get("bytes accessed", 0.0)), stats.wire_bytes,
                 dict(stats.by_op))

@@ -1,72 +1,103 @@
-"""Serving launcher: batched prefill + greedy decode with KV cache.
+"""Serving launcher: thin CLI over the continuous-batching engine.
 
-    PYTHONPATH=src python -m repro.launch.serve --arch tinyllama_1_1b \
-        --smoke --batch 4 --prompt-len 16 --gen 16
+    PYTHONPATH=src python -m repro.launch.serve --arch tinyllama_1_1b --smoke
 
-Demonstrates the production serve path: one prefill forward per request
-batch, then serve_step (decode_step) per generated token against the cache.
+Builds the model, submits a synthetic mixed-length workload, and drives
+repro.serve.ServeEngine: batched prefill into a slot KV pool, one jit'd
+decode step across all slots per token, finished sequences retire and
+waiting requests join the running batch mid-stream. Prints the per-request
+timeline and the engine's latency/throughput report.
+
+``--variant pc3_tr`` serves with the DAISM approximate GEMM (paper §5
+inference path); see benchmarks/serve_bench.py for exact-vs-approx numbers.
 """
 import argparse
+import dataclasses
 import os
+
+
+def build_daism(variant: str, backend: str):
+    from repro.core import Backend, DaismConfig, Variant
+    return DaismConfig(variant=Variant(variant), backend=Backend(backend))
 
 
 def main(argv=None):
     p = argparse.ArgumentParser()
     p.add_argument("--arch", required=True)
-    p.add_argument("--smoke", action="store_true")
-    p.add_argument("--batch", type=int, default=4)
-    p.add_argument("--prompt-len", type=int, default=16)
-    p.add_argument("--gen", type=int, default=16)
+    p.add_argument("--smoke", action="store_true",
+                   help="reduced config + small workload (CPU-friendly)")
+    p.add_argument("--requests", type=int, default=6)
+    p.add_argument("--slots", type=int, default=2,
+                   help="decode batch width / KV pool rows")
+    p.add_argument("--max-seq", type=int, default=64,
+                   help="per-slot KV capacity")
+    p.add_argument("--prompt-len", type=int, default=8,
+                   help="base prompt length (workload staggers around it)")
+    p.add_argument("--gen", type=int, default=8,
+                   help="base generation length")
+    p.add_argument("--arrival-every", type=int, default=0,
+                   help="space arrivals N engine steps apart (0 = all at once)")
+    p.add_argument("--variant", default="exact",
+                   help="daism multiplier variant (exact | fla | ... | pc3_tr)")
+    p.add_argument("--backend", default="jnp",
+                   help="daism backend for approximate variants")
+    p.add_argument("--seed", type=int, default=0)
     p.add_argument("--devices", type=int, default=0)
     args = p.parse_args(argv)
     if args.devices:
-        os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "") +
-                                   f" --xla_force_host_platform_device_count={args.devices}")
-    import time
+        os.environ["XLA_FLAGS"] = (
+            os.environ.get("XLA_FLAGS", "")
+            + f" --xla_force_host_platform_device_count={args.devices}")
 
     import jax
-    import jax.numpy as jnp
 
     from repro.configs import get_config
     from repro.models.registry import build_model
+    from repro.serve import EngineConfig, ServeEngine, synthetic_requests
 
     cfg = get_config(args.arch)
     if args.smoke:
-        cfg = cfg.smoke()
+        cfg = cfg.smoke(window=0)  # slot pools need non-ring caches
+    if args.variant != "exact":
+        cfg = dataclasses.replace(cfg,
+                                  daism=build_daism(args.variant, args.backend))
     model = build_model(cfg)
     params, _ = model.init(jax.random.PRNGKey(0))
-    rng = jax.random.PRNGKey(1)
-    prompts = jax.random.randint(rng, (args.batch, args.prompt_len), 0,
-                                 cfg.vocab)
 
-    max_seq = args.prompt_len + args.gen
-    cache = model.init_cache(args.batch, max_seq)
-    decode = jax.jit(model.decode_step)
+    engine = ServeEngine(model, params, EngineConfig(
+        num_slots=args.slots, max_seq=args.max_seq))
+    requests = synthetic_requests(
+        args.requests, cfg.vocab, base_prompt=args.prompt_len,
+        base_gen=args.gen, seed=args.seed, arrival_every=args.arrival_every)
+    report = engine.run(requests)
 
-    # prefill by stepping the prompt through the cache (uniform code path;
-    # a chunked prefill kernel is the production optimization, see §Perf)
-    t0 = time.perf_counter()
-    tok = prompts[:, :1]
-    for t in range(args.prompt_len):
-        logits, cache = decode(params, prompts[:, t:t + 1], cache)
-    prefill_s = time.perf_counter() - t0
-
-    out_tokens = []
-    t0 = time.perf_counter()
-    tok = jnp.argmax(logits[:, -1], -1)[:, None]
-    for _ in range(args.gen):
-        out_tokens.append(tok)
-        logits, cache = decode(params, tok, cache)
-        tok = jnp.argmax(logits[:, -1], -1)[:, None]
-    jax.block_until_ready(tok)
-    decode_s = time.perf_counter() - t0
-
-    gen = jnp.concatenate(out_tokens, axis=1)
-    print(f"prompts {prompts.shape} -> generated {gen.shape}")
-    print(f"prefill {prefill_s*1e3:.1f} ms, decode "
-          f"{decode_s / args.gen * 1e3:.2f} ms/token "
-          f"({args.batch * args.gen / decode_s:.1f} tok/s)")
-    print("sample:", gen[0].tolist())
+    print(f"== {args.arch} ({args.variant}) — {args.requests} requests over "
+          f"{args.slots} slots ==")
+    for ev in report.events:
+        if ev["event"] == "admit":
+            joined = " (joined running batch)" if ev["joined_running"] else ""
+            print(f"step {ev['step']:4d}  admit  req {ev['request_id']} "
+                  f"-> slot {ev['slot']}{joined}")
+        else:
+            print(f"step {ev['step']:4d}  retire req {ev['request_id']} "
+                  f"(slot {ev['slot']} freed, {ev['reason']})")
+    print(report.summary())
+    if report.completed:
+        sample = report.completed[0]
+        print(f"sample (req {sample.request_id}): {sample.output}")
+    default_workload = all(
+        getattr(args, k) == p.get_default(k)
+        for k in ("requests", "slots", "gen", "prompt_len", "arrival_every"))
+    if args.smoke and default_workload:
+        # the gate is calibrated to the default smoke workload (staggered
+        # lengths oversubscribing 2 slots); custom shapes — one slot, spaced
+        # arrivals, equal-length retire waves — may legitimately never join
+        if report.joined_mid_stream < 2:  # explicit: survives python -O
+            raise SystemExit(
+                "smoke workload must exercise continuous batching "
+                f"(got {report.joined_mid_stream} mid-stream joins)")
+        print("SMOKE-OK: continuous batching exercised "
+              f"({report.joined_mid_stream} mid-stream joins)")
 
 
 if __name__ == "__main__":

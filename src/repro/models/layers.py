@@ -123,6 +123,10 @@ def attend(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
 
     q: (B, Sq, H, D); k, v: (B, Skv, KH, D); *_pos: (Sq,) / (Skv,) absolute
     positions used for causal/window masking (decode passes a 1-length q_pos).
+    Either may instead be (B, Sq) / (B, Skv) for per-row positions — the
+    slot-cache serving path, where every batch row is an independent request
+    at its own sequence offset (masks then cost an extra batch dim, so the
+    shared-position fast path is kept for train/prefill).
     """
     b, sq, h, d = q.shape
     skv, kh = k.shape[1], k.shape[2]
@@ -132,31 +136,51 @@ def attend(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
     sd = jnp.dtype(score_dtype)
     qf = (q.astype(jnp.float32) * scale).astype(sd)
 
+    per_row = jnp.ndim(q_pos) == 2 or jnp.ndim(kv_pos) == 2
+    if per_row:
+        q_pos = jnp.broadcast_to(
+            q_pos if jnp.ndim(q_pos) == 2 else q_pos[None], (b, sq))
+        kv_pos = jnp.broadcast_to(
+            kv_pos if jnp.ndim(kv_pos) == 2 else kv_pos[None], (b, skv))
+
     chunk = min(chunk, skv)
     n_chunks = int(np.ceil(skv / chunk))
     pad = n_chunks * chunk - skv
     if pad:
         k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
         v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
-        kv_pos = jnp.pad(kv_pos, (0, pad), constant_values=2**30)
+        kv_pos = jnp.pad(kv_pos,
+                         ((0, 0), (0, pad)) if per_row else (0, pad),
+                         constant_values=2**30)
     kc = k.reshape(b, n_chunks, chunk, h, d).transpose(1, 0, 2, 3, 4)
     vc = v.reshape(b, n_chunks, chunk, h, d).transpose(1, 0, 2, 3, 4)
-    pc = kv_pos.reshape(n_chunks, chunk)
+    pc = (kv_pos.reshape(b, n_chunks, chunk).transpose(1, 0, 2)
+          if per_row else kv_pos.reshape(n_chunks, chunk))
 
     def body(carry, xs):
         m, l, acc = carry
-        kb, vb, pb = xs  # (B, C, H, D), (B, C, H, D), (C,)
+        kb, vb, pb = xs  # (B, C, H, D), (B, C, H, D), (C,) | (B, C)
         s = jnp.einsum("bqhd,bkhd->bhqk", qf, kb.astype(sd),
                        preferred_element_type=sd)
         if softcap > 0:
             s = jnp.tanh(s / softcap) * softcap
-        mask = jnp.ones((sq, kb.shape[1]), bool)
-        if causal:
-            mask &= pb[None, :] <= q_pos[:, None]
-        if window > 0:
-            mask &= pb[None, :] > (q_pos[:, None] - window)
-        mask &= pb[None, :] < 2**30  # padding
-        s = jnp.where(mask[None, None], s, jnp.asarray(-1e30, sd))
+        if per_row:  # (B, Sq, C) masks from (B, C) x (B, Sq) positions
+            mask = jnp.ones((b, sq, kb.shape[1]), bool)
+            if causal:
+                mask &= pb[:, None, :] <= q_pos[:, :, None]
+            if window > 0:
+                mask &= pb[:, None, :] > (q_pos[:, :, None] - window)
+            mask &= pb[:, None, :] < 2**30  # padding
+            mask = mask[:, None]            # broadcast over heads
+        else:
+            mask = jnp.ones((sq, kb.shape[1]), bool)
+            if causal:
+                mask &= pb[None, :] <= q_pos[:, None]
+            if window > 0:
+                mask &= pb[None, :] > (q_pos[:, None] - window)
+            mask &= pb[None, :] < 2**30  # padding
+            mask = mask[None, None]
+        s = jnp.where(mask, s, jnp.asarray(-1e30, sd))
         m_new = jnp.maximum(m, s.max(-1).astype(jnp.float32))
         corr = jnp.exp(m - m_new)
         p = jnp.exp(s.astype(jnp.float32) - m_new[..., None]).astype(sd)
@@ -203,9 +227,20 @@ def self_attention(ctx: Ctx, x: jnp.ndarray, cfg: ArchConfig, *,
         ck, cv, pos = cache["k"], cache["v"], cache["pos"]
         size = ck.shape[1]
         ring = "abs_pos" in cache
-        slot = lax.rem(pos, size) if ring else pos
-        ck = lax.dynamic_update_slice(ck, k.astype(ck.dtype), (0, slot, 0, 0))
-        cv = lax.dynamic_update_slice(cv, v.astype(cv.dtype), (0, slot, 0, 0))
+        if jnp.ndim(pos) == 1:  # per-slot cache: row i writes at pos[i]
+            if ring:
+                raise NotImplementedError(
+                    "per-slot caches do not support ring/window buffers")
+            row_update = jax.vmap(
+                lambda cr, kr, p: lax.dynamic_update_slice(cr, kr, (p, 0, 0)))
+            ck = row_update(ck, k.astype(ck.dtype), pos)
+            cv = row_update(cv, v.astype(cv.dtype), pos)
+        else:
+            slot = lax.rem(pos, size) if ring else pos
+            ck = lax.dynamic_update_slice(ck, k.astype(ck.dtype),
+                                          (0, slot, 0, 0))
+            cv = lax.dynamic_update_slice(cv, v.astype(cv.dtype),
+                                          (0, slot, 0, 0))
         ck = constrain(ck, ("cache_batch", "cache_seq", "act_kv_heads", None))
         cv = constrain(cv, ("cache_batch", "cache_seq", "act_kv_heads", None))
         new_cache = dict(k=ck, v=cv, pos=pos + s)

@@ -245,13 +245,14 @@ class DecoderLM:
             cache["abs_pos"] = mk((cfg.n_layers, size), jnp.int32, fill=-1)
         return cache
 
-    # -- decode (one token, KV cache) --------------------------------------
-    def decode_step(self, params: Params, tokens: jnp.ndarray, cache,
-                    image_embeds: Optional[jnp.ndarray] = None):
-        """tokens: (B, 1). Returns (logits (B, 1, V), new cache)."""
+    # -- cached forward (shared by decode_step / prefill) -------------------
+    def _cached_forward(self, params: Params, tokens: jnp.ndarray, cache,
+                        positions, pos,
+                        image_embeds: Optional[jnp.ndarray] = None):
+        """Embed -> cached layer stack -> logits. ``positions`` feeds rope and
+        attention masking; ``pos`` is the cache write offset — a scalar
+        (shared, legacy) or a (B,) vector (per-slot serving cache)."""
         cfg = self.cfg
-        pos = cache["pos"]
-        positions = jnp.reshape(pos, (1,))
         ctx = Ctx("apply", params=params)
         x = embed(ctx, tokens, cfg)
 
@@ -288,8 +289,47 @@ class DecoderLM:
                                   *new_parts)
         x = norm(ctx, "final_ln", x, cfg)
         logits = unembed(ctx, x, cfg)
-        new_cache = dict(new_lc, pos=pos + 1)
-        return logits, new_cache
+        return logits, new_lc
+
+    # -- decode (one token, KV cache) --------------------------------------
+    def decode_step(self, params: Params, tokens: jnp.ndarray, cache,
+                    image_embeds: Optional[jnp.ndarray] = None):
+        """tokens: (B, 1). Returns (logits (B, 1, V), new cache).
+
+        ``cache['pos']`` is a scalar (all rows at the same offset — the
+        legacy single-request path) or a (B,) vector (slot cache: row i is
+        an independent request at offset pos[i], see repro.serve)."""
+        pos = cache["pos"]
+        positions = pos[:, None] if jnp.ndim(pos) == 1 else jnp.reshape(
+            pos, (1,))
+        logits, new_lc = self._cached_forward(params, tokens, cache,
+                                              positions, pos, image_embeds)
+        return logits, dict(new_lc, pos=pos + 1)
+
+    # -- prefill (whole prompt in one forward, KV cache) --------------------
+    def prefill(self, params: Params, tokens: jnp.ndarray, cache,
+                image_embeds: Optional[jnp.ndarray] = None):
+        """Batched prompt ingestion: one forward writes the prompt K/V into
+        the cache and returns full logits. tokens: (B, S) — right-padded
+        prompts are fine: a pad entry at position p >= true_len is either
+        overwritten by decode before position p is reached or excluded by
+        the causal mask, so it is never attended.
+
+        Returns (logits (B, S, V), new cache with pos advanced by S). A
+        serving engine overwrites ``pos`` with per-row true lengths when it
+        adopts the K/V into its slot pool.
+        """
+        if "abs_pos" in cache:
+            raise NotImplementedError(
+                "prefill does not support ring/window caches")
+        pos = cache["pos"]
+        if jnp.ndim(pos) != 0:
+            raise ValueError("prefill expects a scalar-pos cache")
+        s = tokens.shape[1]
+        positions = pos + jnp.arange(s)
+        logits, new_lc = self._cached_forward(params, tokens, cache,
+                                              positions, pos, image_embeds)
+        return logits, dict(new_lc, pos=pos + s)
 
 
 # ---------------------------------------------------------------------------

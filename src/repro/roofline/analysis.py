@@ -134,12 +134,22 @@ class Roofline:
                 "collective": self.collective_s}
 
 
+def xla_cost(compiled) -> Dict[str, float]:
+    """``Compiled.cost_analysis()`` normalized across jax versions.
+
+    Newer jax returns a flat dict; the pinned 0.4.x returns a one-element
+    list of dicts (one per computation). Always returns the dict.
+    """
+    cost = compiled.cost_analysis()
+    if isinstance(cost, (list, tuple)):
+        cost = cost[0] if cost else {}
+    return cost
+
+
 def analyze(compiled, *, arch: str, shape: str, mesh_name: str,
             n_chips: int, model_flops: float,
             memory_per_device: Optional[float] = None) -> Roofline:
-    cost = compiled.cost_analysis()
-    if isinstance(cost, list):  # older API returns [dict]
-        cost = cost[0]
+    cost = xla_cost(compiled)
     flops = float(cost.get("flops", 0.0))
     byts = float(cost.get("bytes accessed", 0.0))
     stats = collective_bytes_from_hlo(compiled.as_text(), n_chips)

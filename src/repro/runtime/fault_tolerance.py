@@ -27,6 +27,7 @@ import jax
 import numpy as np
 
 from repro.checkpoint import checkpoint as ckpt
+from repro.runtime.watchdog import StepWatchdog
 
 log = logging.getLogger("repro.runtime")
 
@@ -72,6 +73,8 @@ def run(loop_cfg: TrainLoopConfig,
     SimulatedPreemption from it).
     """
     state = LoopState()
+    watchdog = StepWatchdog(factor=loop_cfg.straggler_factor,
+                            alpha=loop_cfg.ewma_alpha)
     last = ckpt.latest_step(loop_cfg.ckpt_dir)
     if last is not None:  # restart semantics: joint {"params","opt"} layout
         log.warning("resuming from checkpoint step %d", last)
@@ -90,22 +93,15 @@ def run(loop_cfg: TrainLoopConfig,
         params, opt_state, metrics = train_step(params, opt_state, batch)
         jax.block_until_ready(metrics["loss"])
         dt = time.monotonic() - t0
-        # straggler watchdog (EWMA of synchronous step time). The first
-        # measured step is compile-dominated: skip it, or a 10-100x compile
-        # step poisons the EWMA and masks real stragglers for many steps.
-        state.measured_steps += 1
-        if state.measured_steps <= 1:
-            pass  # warmup/compile step: excluded from the EWMA
-        elif state.ewma_step_time == 0.0:
-            state.ewma_step_time = dt
-        else:
-            if dt > loop_cfg.straggler_factor * state.ewma_step_time:
-                state.stragglers += 1
-                log.warning("straggler step %d: %.3fs vs EWMA %.3fs",
-                            state.step, dt, state.ewma_step_time)
-            state.ewma_step_time = ((1 - loop_cfg.ewma_alpha) *
-                                    state.ewma_step_time
-                                    + loop_cfg.ewma_alpha * dt)
+        # straggler watchdog (shared with the serving engine; see
+        # runtime/watchdog.py for the warmup-exclusion rationale)
+        ewma_before = watchdog.ewma  # observe() folds dt in; log the baseline
+        if watchdog.observe(dt):
+            log.warning("straggler step %d: %.3fs vs EWMA %.3fs",
+                        state.step, dt, ewma_before)
+        state.measured_steps = watchdog.observed
+        state.ewma_step_time = watchdog.ewma
+        state.stragglers = watchdog.stragglers
         state.step += 1
         if metrics_hook is not None and state.step % loop_cfg.log_every == 0:
             metrics_hook(state.step, jax.device_get(metrics))

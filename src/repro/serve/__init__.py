@@ -1,0 +1,8 @@
+"""Production serving subsystem: continuous batching over a slot-based
+KV-cache pool (see DESIGN notes in engine.py)."""
+from .engine import EngineConfig, ServeEngine, ServeReport
+from .scheduler import Request, RequestState, Scheduler
+from .workload import synthetic_requests
+
+__all__ = ["EngineConfig", "Request", "RequestState", "Scheduler",
+           "ServeEngine", "ServeReport", "synthetic_requests"]

@@ -1,0 +1,313 @@
+"""Synchronous continuous-batching serving engine over a slot KV pool.
+
+Design (the scaffolding every later scaling PR builds on):
+
+* **Slot pool** — one fixed-capacity cache allocation for the whole engine:
+  ``k/v: (layers, num_slots, max_seq, kv_heads, head_dim)`` plus a per-slot
+  length vector ``pos: (num_slots,)``. Row ``i`` is an independent request
+  at its own offset; the model's per-slot decode path (``cache['pos']`` as
+  a vector) masks and writes each row at its own position.
+* **Prefill / decode separation** — one jit'd batched prefill ingests whole
+  prompts (padded to a shape bucket, so compiles are O(log^2) in practice)
+  and yields the first generated token; one jit'd decode step is reused for
+  every subsequent token across all slots. Prompt K/V is adopted into the
+  pool by a jit'd scatter ("insert") that reads/writes cache rows by slot
+  index; out-of-range slot ids (padding rows of the prefill bucket) are
+  dropped by the scatter.
+* **Donated buffers** — decode and insert donate the pool, so XLA updates
+  the cache in place instead of allocating a second pool per token (skipped
+  on CPU, where jax does not implement donation and would warn).
+* **Continuous batching** — between decode steps the scheduler retires
+  finished rows and admits waiting requests into the freed slots
+  (scheduler.py); decode always runs the full fixed-shape batch, so no
+  recompiles happen at admission/retirement boundaries.
+* **Accounting** — per-request TTFT / latency and engine-level
+  tokens/sec + step-latency percentiles (ServeReport), with the runtime
+  straggler watchdog counting anomalously slow decode steps.
+
+Greedy (argmax) sampling: deterministic, so batched decode is
+token-identical to the single-request ``decode_step`` path — asserted in
+tests/test_serve.py.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Dict, List, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.bitops import round_up as _round_up
+from repro.runtime.watchdog import StepWatchdog
+
+from .scheduler import Request, RequestState, Scheduler
+
+
+def _next_pow2(n: int) -> int:
+    return 1 << max(n - 1, 0).bit_length()
+
+
+def _pct(xs: Sequence[float], q: float) -> float:
+    return float(np.percentile(np.asarray(xs), q)) if len(xs) else 0.0
+
+
+@dataclasses.dataclass(frozen=True)
+class EngineConfig:
+    num_slots: int = 4        # decode batch width == cache pool rows
+    max_seq: int = 128        # per-slot KV capacity (prompt + generation)
+    prefill_bucket: int = 16  # prompt lengths padded up to a multiple
+    eos_id: Optional[int] = None  # default EOS for requests without one
+
+
+@dataclasses.dataclass
+class ServeReport:
+    """Aggregate accounting for one engine run.
+
+    Percentiles are unfiltered wall times: on a cold engine the first
+    prefill/decode steps are jit-compile-dominated, so small-workload p99
+    (and early TTFT) measure compilation — warm the engine or discount the
+    first steps when comparing kernels. The straggler counter already
+    excludes warmup (StepWatchdog)."""
+
+    completed: List[RequestState]
+    wall_s: float
+    prefill_s: float
+    decode_s: float
+    decode_steps: int
+    generated_tokens: int
+    tokens_per_s: float
+    ttft_p50_ms: float
+    ttft_p99_ms: float
+    latency_p50_ms: float
+    latency_p99_ms: float
+    step_p50_ms: float
+    step_p99_ms: float
+    joined_mid_stream: int
+    straggler_steps: int
+    events: List[Dict[str, Any]]
+
+    def summary(self) -> str:
+        lines = [
+            f"requests {len(self.completed)}  generated "
+            f"{self.generated_tokens} tok  wall {self.wall_s:.2f}s  "
+            f"({self.tokens_per_s:.1f} tok/s decode)",
+            f"prefill {self.prefill_s * 1e3:.1f} ms total;  decode step "
+            f"p50 {self.step_p50_ms:.2f} / p99 {self.step_p99_ms:.2f} ms"
+            f" over {self.decode_steps} steps"
+            f" ({self.straggler_steps} stragglers)",
+            f"TTFT p50 {self.ttft_p50_ms:.1f} / p99 {self.ttft_p99_ms:.1f} "
+            f"ms;  request latency p50 {self.latency_p50_ms:.1f} / p99 "
+            f"{self.latency_p99_ms:.1f} ms",
+            f"{self.joined_mid_stream} request(s) joined the running batch "
+            f"mid-stream (continuous batching)",
+        ]
+        return "\n".join(lines)
+
+
+class ServeEngine:
+    """Drives a DecoderLM-style model (init_cache / prefill / decode_step)
+    through continuous-batching generation. Synchronous: ``run`` blocks
+    until every submitted request completes."""
+
+    def __init__(self, model, params, cfg: EngineConfig):
+        if not hasattr(model, "prefill"):
+            raise TypeError(
+                f"{type(model).__name__} has no prefill(); the serving "
+                "engine requires the DecoderLM cached-forward API")
+        self.model = model
+        self.params = params
+        self.cfg = cfg
+        self.scheduler = Scheduler(cfg.num_slots)
+
+        self.cache = model.init_cache(cfg.num_slots, cfg.max_seq)
+        if "abs_pos" in self.cache:
+            raise ValueError(
+                "slot pool needs a non-ring cache: model window "
+                f"{model.cfg.window} < max_seq {cfg.max_seq}")
+        # scalar -> per-slot lengths: row i of the pool is at offset pos[i]
+        self.cache["pos"] = jnp.zeros((cfg.num_slots,), jnp.int32)
+        self._last_tok = np.zeros((cfg.num_slots,), np.int32)
+
+        # donation: in-place pool updates (not implemented on CPU — jax
+        # would warn and copy anyway)
+        donate = jax.default_backend() != "cpu"
+
+        def prefill_fn(params, tokens, lens):
+            # scratch cache sized to the prompt bucket, not max_seq: prefill
+            # attention and allocation scale with the prompt, and the slack
+            # rows of the pool slot keep their previous occupant's K/V —
+            # never attended, by the same write-before-visible invariant
+            # that covers prompt padding (see DecoderLM.prefill)
+            pcache = model.init_cache(tokens.shape[0], tokens.shape[1])
+            logits, pcache = model.prefill(params, tokens, pcache)
+            last = jnp.take_along_axis(logits, (lens - 1)[:, None, None],
+                                       axis=1)  # (R, 1, V) at true length
+            return jnp.argmax(last[:, 0, :], -1), pcache["k"], pcache["v"]
+
+        def insert_fn(cache, k, v, slots, lens):
+            # adopt prefill K/V into pool rows by slot index; padding rows
+            # carry slot id == num_slots (out of range) and are dropped.
+            # k/v: (L, R, spad, KH, HD) — jax scatter keeps the advanced
+            # index axis in place, so no transpose is needed.
+            spad = k.shape[2]
+            return dict(
+                cache,
+                k=cache["k"].at[:, slots, :spad].set(k, mode="drop"),
+                v=cache["v"].at[:, slots, :spad].set(v, mode="drop"),
+                pos=cache["pos"].at[slots].set(lens, mode="drop"))
+
+        def decode_fn(params, cache, tokens):
+            logits, cache = model.decode_step(params, tokens[:, None], cache)
+            return jnp.argmax(logits[:, -1, :], -1), cache
+
+        self._prefill = jax.jit(prefill_fn)
+        self._insert = jax.jit(insert_fn,
+                               donate_argnums=(0,) if donate else ())
+        self._decode = jax.jit(decode_fn,
+                               donate_argnums=(1,) if donate else ())
+
+        self.step = 0
+        self.events: List[Dict[str, Any]] = []
+        self.watchdog = StepWatchdog()
+        self._step_times: List[float] = []
+        self._prefill_s = 0.0
+
+    # -- request intake ----------------------------------------------------
+
+    def submit(self, request: Request) -> RequestState:
+        if not request.prompt:
+            raise ValueError("prompt must be non-empty")
+        if request.max_new_tokens < 1:
+            raise ValueError("max_new_tokens must be >= 1 (prefill always "
+                             "yields the first token)")
+        need = len(request.prompt) + request.max_new_tokens
+        if need > self.cfg.max_seq:
+            raise ValueError(
+                f"request needs {need} cache rows > max_seq "
+                f"{self.cfg.max_seq}")
+        state = self.scheduler.submit(request, now=time.perf_counter())
+        if state.eos_id is None:  # engine default; the Request is not mutated
+            state.eos_id = self.cfg.eos_id
+        return state
+
+    # -- engine internals ----------------------------------------------------
+
+    def _event(self, kind: str, state: RequestState, slot: int, **kw):
+        self.events.append(dict(step=self.step, event=kind,
+                                request_id=state.request_id,
+                                slot=slot, **kw))
+
+    def _admit(self, admitted: List[RequestState]):
+        """One batched prefill for this tick's admissions: pad rows to a
+        power of two and prompt length to the bucket, scatter K/V into the
+        pool, seed each slot with its first generated token."""
+        rpad = _next_pow2(len(admitted))
+        spad = min(_round_up(max(len(s.request.prompt) for s in admitted),
+                             self.cfg.prefill_bucket), self.cfg.max_seq)
+        tokens = np.zeros((rpad, spad), np.int32)
+        lens = np.ones((rpad,), np.int32)
+        slots = np.full((rpad,), self.cfg.num_slots, np.int32)  # OOB: drop
+        for i, state in enumerate(admitted):
+            prompt = state.request.prompt
+            tokens[i, :len(prompt)] = prompt
+            lens[i] = len(prompt)
+            slots[i] = state.slot
+        t0 = time.perf_counter()
+        first, k, v = self._prefill(self.params, jnp.asarray(tokens),
+                                    jnp.asarray(lens))
+        self.cache = self._insert(self.cache, k, v, jnp.asarray(slots),
+                                  jnp.asarray(lens))
+        first = np.asarray(first)  # blocks; prefill wall time is honest
+        dt = time.perf_counter() - t0
+        self._prefill_s += dt
+        now = time.perf_counter()
+        for i, state in enumerate(admitted):
+            state.prefill_s = dt
+            state.first_token_time = now
+            self._event("admit", state, state.slot,
+                        joined_running=state.joined_running_batch)
+            self._append_token(state, int(first[i]))
+
+    def _append_token(self, state: RequestState, token: int):
+        state.output.append(token)
+        self._last_tok[state.slot] = token
+        reason = ""
+        if state.eos_id is not None and token == state.eos_id:
+            reason = "eos"
+        elif len(state.output) >= state.request.max_new_tokens:
+            reason = "length"
+        if reason:
+            slot = state.slot  # retire() resets it; event wants the real one
+            self.scheduler.retire(slot, reason, self.step,
+                                  now=time.perf_counter())
+            self._event("retire", state, slot, reason=reason)
+
+    def tick(self) -> bool:
+        """One engine iteration: admit -> decode one token for every active
+        slot -> retire finished rows. Returns False when fully drained."""
+        if not self.scheduler.has_work:
+            return False
+        now = time.perf_counter()
+        for waiting in self.scheduler.waiting:  # trace replay: stamp arrival
+            if (waiting.arrival_time == 0.0
+                    and waiting.request.arrival_step <= self.step):
+                waiting.arrival_time = now
+        admitted = self.scheduler.admit(self.step)
+        if admitted:
+            self._admit(admitted)
+        if not self.scheduler.active:  # only future arrivals left
+            self.step += 1
+            return self.scheduler.has_work
+        t0 = time.perf_counter()
+        next_tok, self.cache = self._decode(
+            self.params, self.cache, jnp.asarray(self._last_tok))
+        next_tok = np.asarray(next_tok)  # host sync: scheduler needs tokens
+        dt = time.perf_counter() - t0
+        self._step_times.append(dt)
+        self.watchdog.observe(dt)
+        self.step += 1
+        for slot, state in list(self.scheduler.active.items()):
+            self._append_token(state, int(next_tok[slot]))
+        return self.scheduler.has_work
+
+    # -- driver --------------------------------------------------------------
+
+    def run(self, requests: Sequence[Request]) -> ServeReport:
+        """Serve ``requests`` to completion and report. Single-use: the
+        report aggregates everything the engine has done, so reuse would
+        fold the previous run's accounting into the next report — build a
+        fresh engine (or drive tick()/submit() yourself) instead."""
+        if self.scheduler.finished or self._step_times:
+            raise RuntimeError(
+                "ServeEngine.run() is single-use; build a fresh engine")
+        for r in requests:
+            self.submit(r)
+        t0 = time.perf_counter()
+        while self.tick():
+            pass
+        wall = time.perf_counter() - t0
+        done = self.scheduler.finished
+        generated = sum(len(s.output) for s in done)
+        decode_s = float(sum(self._step_times))
+        # prefill produces 1 token/request; the rest ride decode steps
+        decode_tokens = generated - len(done)
+        return ServeReport(
+            completed=done,
+            wall_s=wall,
+            prefill_s=self._prefill_s,
+            decode_s=decode_s,
+            decode_steps=len(self._step_times),
+            generated_tokens=generated,
+            tokens_per_s=decode_tokens / decode_s if decode_s else 0.0,
+            ttft_p50_ms=_pct([s.ttft_s * 1e3 for s in done], 50),
+            ttft_p99_ms=_pct([s.ttft_s * 1e3 for s in done], 99),
+            latency_p50_ms=_pct([s.latency_s * 1e3 for s in done], 50),
+            latency_p99_ms=_pct([s.latency_s * 1e3 for s in done], 99),
+            step_p50_ms=_pct([t * 1e3 for t in self._step_times], 50),
+            step_p99_ms=_pct([t * 1e3 for t in self._step_times], 99),
+            joined_mid_stream=sum(s.joined_running_batch for s in done),
+            straggler_steps=self.watchdog.stragglers,
+            events=self.events,
+        )

@@ -1,0 +1,122 @@
+"""Continuous-batching request scheduler: FCFS over a fixed KV-slot pool.
+
+Iteration-level scheduling (Orca / vLLM style) without async machinery:
+the engine runs one batched decode step at a time; between steps the
+scheduler retires finished sequences and admits waiting requests into the
+freed slots, so new work joins the running batch mid-stream instead of
+waiting for a full batch drain. A "slot" is one row of the engine's
+fixed-capacity cache pool — admission binds a request to a slot, retirement
+returns the slot for reuse.
+"""
+from __future__ import annotations
+
+import collections
+import dataclasses
+import itertools
+from typing import Deque, Dict, List, Optional
+
+
+@dataclasses.dataclass
+class Request:
+    """One generation request. ``arrival_step`` lets drivers replay a trace:
+    the scheduler will not admit the request before that engine step."""
+
+    prompt: List[int]
+    max_new_tokens: int
+    eos_id: Optional[int] = None
+    arrival_step: int = 0
+
+
+@dataclasses.dataclass
+class RequestState:
+    """Scheduler-owned runtime state + accounting for one request."""
+
+    request: Request
+    request_id: int = -1  # scheduler-assigned; the Request is never mutated
+    slot: int = -1
+    output: List[int] = dataclasses.field(default_factory=list)
+    eos_id: Optional[int] = None  # resolved (request or engine default)
+    finish_reason: str = ""
+    admit_step: int = -1
+    finish_step: int = -1
+    joined_running_batch: bool = False  # admitted while others were decoding
+    # wall-clock accounting (seconds, engine-stamped). arrival_time is when
+    # the request became admissible — equal to submit_time for immediate
+    # arrivals, stamped later for arrival_step-gated trace replays, so
+    # TTFT/latency never include simulated pre-arrival queueing.
+    submit_time: float = 0.0
+    arrival_time: float = 0.0
+    first_token_time: float = 0.0
+    finish_time: float = 0.0
+    prefill_s: float = 0.0  # wall time of the prefill batch it rode in
+
+    @property
+    def ttft_s(self) -> float:
+        return self.first_token_time - self.arrival_time
+
+    @property
+    def latency_s(self) -> float:
+        return self.finish_time - self.arrival_time
+
+
+class Scheduler:
+    """FCFS continuous-batching scheduler over ``num_slots`` cache slots."""
+
+    def __init__(self, num_slots: int):
+        self.num_slots = num_slots
+        self.waiting: Deque[RequestState] = collections.deque()
+        self.active: Dict[int, RequestState] = {}   # slot -> state
+        self.finished: List[RequestState] = []
+        # LIFO pool: a just-retired slot is handed out before older free
+        # ones (fresh slots 0..n-1 start in ascending pop order)
+        self._free: List[int] = list(range(num_slots))[::-1]
+        self._ids = itertools.count()
+
+    @property
+    def has_work(self) -> bool:
+        return bool(self.waiting or self.active)
+
+    @property
+    def free_slots(self) -> int:
+        return len(self._free)
+
+    def submit(self, request: Request, now: float = 0.0) -> RequestState:
+        state = RequestState(request=request, request_id=next(self._ids),
+                             eos_id=request.eos_id, submit_time=now,
+                             arrival_time=now if request.arrival_step <= 0
+                             else 0.0)
+        self.waiting.append(state)
+        return state
+
+    def admit(self, step: int) -> List[RequestState]:
+        """Bind waiting requests (whose arrival time has come) to free
+        slots — FCFS among the arrived; an unarrived request does not block
+        arrived ones queued behind it. Returns the newly admitted states;
+        the caller must prefill them before the next decode step."""
+        admitted: List[RequestState] = []
+        running = bool(self.active)
+        not_yet_arrived: List[RequestState] = []
+        while self._free and self.waiting:
+            state = self.waiting.popleft()
+            if state.request.arrival_step > step:
+                not_yet_arrived.append(state)
+                continue
+            state.slot = self._free.pop()
+            state.admit_step = step
+            state.joined_running_batch = running
+            self.active[state.slot] = state
+            admitted.append(state)
+        self.waiting.extendleft(reversed(not_yet_arrived))
+        return admitted
+
+    def retire(self, slot: int, reason: str, step: int,
+               now: float = 0.0) -> RequestState:
+        """Finish the request in ``slot`` and return the slot to the pool."""
+        state = self.active.pop(slot)
+        state.finish_reason = reason
+        state.finish_step = step
+        state.finish_time = now
+        state.slot = -1
+        self._free.append(slot)
+        self.finished.append(state)
+        return state

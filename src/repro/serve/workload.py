@@ -1,0 +1,35 @@
+"""Synthetic serving workloads.
+
+Deterministic mixed-length request sets: prompt/generation lengths follow a
+fixed stagger pattern (so retirements never all land on the same step and
+continuous batching is actually exercised), token ids come from a seeded
+rng. Shared by the serve CLI, the benchmark, and the example.
+"""
+from __future__ import annotations
+
+from typing import List
+
+import numpy as np
+
+from .scheduler import Request
+
+# length stagger patterns (cycled): relative offsets around the base
+_PROMPT_STAGGER = (0, 3, -2, 5, 1, -3, 4, 2)
+_GEN_STAGGER = (0, -3, 2, 5, -2, 3, -1, 4)
+
+
+def synthetic_requests(n: int, vocab: int, *, base_prompt: int = 8,
+                       base_gen: int = 8, seed: int = 0,
+                       arrival_every: int = 0) -> List[Request]:
+    """``n`` requests with staggered lengths. ``arrival_every`` > 0 spaces
+    arrivals that many engine steps apart (trace replay); 0 = all at once."""
+    rng = np.random.default_rng(seed)
+    requests = []
+    for i in range(n):
+        plen = max(2, base_prompt + _PROMPT_STAGGER[i % len(_PROMPT_STAGGER)])
+        gen = max(2, base_gen + _GEN_STAGGER[i % len(_GEN_STAGGER)])
+        requests.append(Request(
+            prompt=rng.integers(0, vocab, size=plen).tolist(),
+            max_new_tokens=gen,
+            arrival_step=i * arrival_every))
+    return requests

@@ -21,8 +21,8 @@ def test_xla_counts_scan_body_once():
     """The motivating defect: cost_analysis under-reports scanned layers."""
     w = jnp.zeros((8, 128, 128), jnp.bfloat16)
     x = jnp.zeros((128, 128), jnp.bfloat16)
-    cs = jax.jit(_scan_mm()).lower(x, w).compile().cost_analysis()
-    cu = jax.jit(_scan_mm(unroll=8)).lower(x, w).compile().cost_analysis()
+    cs = ra.xla_cost(jax.jit(_scan_mm()).lower(x, w).compile())
+    cu = ra.xla_cost(jax.jit(_scan_mm(unroll=8)).lower(x, w).compile())
     assert float(cs["flops"]) < 0.2 * float(cu["flops"])
 
 
@@ -99,7 +99,7 @@ def test_probe_correction_matches_full_unroll():
     w = jnp.zeros((L, 256, 256), jnp.bfloat16)
 
     def bytes_of(unroll):
-        c = jax.jit(model(unroll)).lower(x, w).compile().cost_analysis()
+        c = ra.xla_cost(jax.jit(model(unroll)).lower(x, w).compile())
         return float(c["bytes accessed"])
 
     b1, b2, bfull = bytes_of(1), bytes_of(2), bytes_of(L)

@@ -1,0 +1,197 @@
+"""Serving-engine tests: scheduler admit/retire, continuous batching,
+slot reuse isolation, and token-identity of batched decode vs. the
+single-request decode_step path."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.models.registry import build_model
+from repro.runtime.watchdog import StepWatchdog
+from repro.serve import (EngineConfig, Request, Scheduler, ServeEngine,
+                         synthetic_requests)
+
+MAX_SEQ = 48
+
+
+@pytest.fixture(scope="module")
+def served():
+    cfg = get_config("tinyllama_1_1b").smoke(n_layers=2, vocab=128)
+    model = build_model(cfg)
+    params, _ = model.init(jax.random.PRNGKey(0))
+    return cfg, model, params
+
+
+def _reference_generate(model, params, prompt, max_new):
+    """The existing single-request path: scalar-pos cache, one decode_step
+    per prompt/generated token. The oracle batched serving must match."""
+    decode = jax.jit(model.decode_step)
+    cache = model.init_cache(1, MAX_SEQ)
+    toks = jnp.asarray([prompt], jnp.int32)
+    logits = None
+    for t in range(len(prompt)):
+        logits, cache = decode(params, toks[:, t:t + 1], cache)
+    tok = int(jnp.argmax(logits[0, -1]))
+    out = [tok]
+    while len(out) < max_new:
+        logits, cache = decode(params, jnp.asarray([[tok]], jnp.int32), cache)
+        tok = int(jnp.argmax(logits[0, -1]))
+        out.append(tok)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Scheduler (pure logic, no jax)
+# ---------------------------------------------------------------------------
+
+def test_scheduler_admits_and_retires():
+    sched = Scheduler(num_slots=2)
+    for i in range(3):
+        sched.submit(Request(prompt=[1, 2], max_new_tokens=4))
+    admitted = sched.admit(step=0)
+    assert [s.slot for s in admitted] == [0, 1]
+    assert sched.free_slots == 0 and len(sched.waiting) == 1
+    assert sched.admit(step=1) == []  # no free slot -> nobody admitted
+
+    done = sched.retire(0, "length", step=5)
+    assert done.finish_reason == "length" and done.slot == -1
+    assert sched.free_slots == 1
+
+    late = sched.admit(step=6)
+    assert len(late) == 1 and late[0].slot == 0  # freed slot is reused
+    assert late[0].joined_running_batch  # slot 1 was still decoding
+    assert late[0].request_id == 2
+    sched.retire(0, "eos", step=8)
+    sched.retire(1, "length", step=8)
+    assert not sched.has_work and sched.free_slots == 2
+
+
+def test_scheduler_arrival_step_gating():
+    sched = Scheduler(num_slots=4)
+    sched.submit(Request(prompt=[1], max_new_tokens=2, arrival_step=0))
+    sched.submit(Request(prompt=[2], max_new_tokens=2, arrival_step=5))
+    assert len(sched.admit(step=0)) == 1  # the future arrival must wait
+    assert sched.admit(step=4) == []
+    assert len(sched.admit(step=5)) == 1
+
+
+def test_scheduler_unarrived_head_does_not_block():
+    """Non-monotonic arrival trace: an unarrived head-of-queue request must
+    not starve arrived requests queued behind it."""
+    sched = Scheduler(num_slots=2)
+    sched.submit(Request(prompt=[1], max_new_tokens=2, arrival_step=10))
+    sched.submit(Request(prompt=[2], max_new_tokens=2, arrival_step=0))
+    admitted = sched.admit(step=0)
+    assert [s.request_id for s in admitted] == [1]
+    assert [s.request_id for s in sched.waiting] == [0]  # order preserved
+    assert [s.request_id for s in sched.admit(step=10)] == [0]
+
+
+# ---------------------------------------------------------------------------
+# Engine vs. the single-request oracle
+# ---------------------------------------------------------------------------
+
+def test_batched_decode_token_identical_to_single_request(served):
+    """5 mixed-length requests over 2 slots (forcing slot reuse and
+    mid-stream joins) generate exactly the tokens the legacy path does."""
+    cfg, model, params = served
+    requests = synthetic_requests(5, cfg.vocab, base_prompt=6, base_gen=6,
+                                  seed=3)
+    expected = {i: _reference_generate(model, params, r.prompt,
+                                       r.max_new_tokens)
+                for i, r in enumerate(requests)}
+
+    engine = ServeEngine(model, params, EngineConfig(num_slots=2,
+                                                     max_seq=MAX_SEQ))
+    report = engine.run(requests)
+    assert len(report.completed) == 5
+    assert report.joined_mid_stream >= 1  # continuous batching exercised
+    for state in report.completed:
+        assert state.output == expected[state.request_id], state.request_id
+
+
+def test_slot_reuse_does_not_leak_kv(served):
+    """The same prompt served fresh and after slot reuse (with different
+    neighbors in the batch) must generate identical tokens — any stale K/V
+    from the previous occupant would corrupt the reused slot."""
+    cfg, model, params = served
+    rng = np.random.default_rng(7)
+    twin = rng.integers(0, cfg.vocab, size=7).tolist()
+    other = [rng.integers(0, cfg.vocab, size=int(n)).tolist()
+             for n in (5, 9, 6)]
+    requests = [
+        Request(prompt=twin, max_new_tokens=6),      # first wave, slot 0
+        Request(prompt=other[0], max_new_tokens=12),  # long-running neighbor
+        Request(prompt=other[1], max_new_tokens=4),
+        Request(prompt=twin, max_new_tokens=6),      # lands in a reused slot
+        Request(prompt=other[2], max_new_tokens=3),
+    ]
+    engine = ServeEngine(model, params, EngineConfig(num_slots=2,
+                                                     max_seq=MAX_SEQ))
+    report = engine.run(requests)
+    by_id = {s.request_id: s for s in report.completed}
+    assert by_id[3].admit_step > 0  # actually reused a slot mid-stream
+    assert by_id[0].output == by_id[3].output
+
+
+def test_eos_retires_early(served):
+    cfg, model, params = served
+    prompt = [3, 14, 15, 92, 65]
+    ref = _reference_generate(model, params, prompt, 8)
+    eos = ref[2]
+    engine = ServeEngine(model, params, EngineConfig(num_slots=1,
+                                                     max_seq=MAX_SEQ))
+    report = engine.run([Request(prompt=prompt, max_new_tokens=8,
+                                 eos_id=eos)])
+    state = report.completed[0]
+    assert state.finish_reason == "eos"
+    assert state.output == ref[:3]
+
+
+def test_invalid_requests_rejected(served):
+    cfg, model, params = served
+    engine = ServeEngine(model, params, EngineConfig(num_slots=1,
+                                                     max_seq=16))
+    with pytest.raises(ValueError, match="max_seq"):
+        engine.submit(Request(prompt=[1] * 10, max_new_tokens=10))
+    with pytest.raises(ValueError, match="non-empty"):
+        engine.submit(Request(prompt=[], max_new_tokens=4))
+    with pytest.raises(ValueError, match="max_new_tokens"):
+        engine.submit(Request(prompt=[1, 2], max_new_tokens=0))
+
+
+def test_prefill_matches_step_decode_logits(served):
+    """Model-level: one batched prefill == stepping the prompt through the
+    cache (the old serve path), including right-padded rows."""
+    cfg, model, params = served
+    toks = jax.random.randint(jax.random.PRNGKey(5), (1, 6), 0, cfg.vocab)
+
+    cache = model.init_cache(1, 16)
+    step_logits = []
+    for t in range(6):
+        lg, cache = model.decode_step(params, toks[:, t:t + 1], cache)
+        step_logits.append(np.asarray(lg[:, 0], np.float32))
+    ref = np.stack(step_logits, 1)
+
+    # same prompt right-padded to 8 in a 2-row batch: rows are independent
+    padded = jnp.zeros((2, 8), jnp.int32).at[0, :6].set(toks[0])
+    c2 = model.init_cache(2, 16)
+    plg, c2 = model.prefill(params, padded, c2)
+    np.testing.assert_allclose(np.asarray(plg[:1, :6], np.float32), ref,
+                               rtol=1e-5, atol=1e-5)
+    assert int(c2["pos"]) == 8
+
+
+# ---------------------------------------------------------------------------
+# Runtime watchdog (shared by train loop + engine)
+# ---------------------------------------------------------------------------
+
+def test_watchdog_skips_warmup_and_counts_stragglers():
+    dog = StepWatchdog(factor=3.0, alpha=0.5, warmup=1)
+    assert not dog.observe(100.0)  # compile step: excluded from the EWMA
+    assert not dog.observe(1.0)    # seeds the EWMA
+    assert not dog.observe(1.2)
+    assert dog.observe(50.0)       # straggler vs ~1.1 EWMA
+    assert dog.stragglers == 1
+    assert dog.ewma < 30.0
