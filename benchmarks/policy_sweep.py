@@ -1,0 +1,180 @@
+"""Accuracy-vs-energy sweep over mixed per-site approximation policies.
+
+The paper's energy/accuracy knob (multiplier variant, truncation) is a
+*per-multiplier* choice; the policy API (repro.policy) makes it addressable
+per op-site. This sweep measures what that buys: on LeNet-5 (trained exact,
+evaluated under each policy — the paper's Table-2 protocol) and on a smoke
+TinyLlama (logit fidelity vs the exact forward), each policy reports task
+quality next to the analytical multiply-energy estimate (core/energy Eq 4-6)
+accumulated from the per-site resolution log — so mixed policies (sensitive
+sites exact, middle layers approximate) land between all-exact and
+all-approximate on both axes.
+
+Standalone:  PYTHONPATH=src:. python benchmarks/policy_sweep.py [--smoke]
+Harness:     PYTHONPATH=src:. python benchmarks/run.py policy_sweep
+"""
+from __future__ import annotations
+
+import time
+from typing import Dict, List
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import policy as P
+from repro.configs import get_config
+from repro.core import Backend, DaismConfig, Variant
+from repro.data.synthetic import eval_set, image_batches
+from repro.models.cnn import CNNModel
+from repro.models.registry import build_model, classifier_loss
+from repro.optim import AdamWConfig, apply_updates, init_state
+
+PC3_TR = DaismConfig(variant=Variant.PC3_TR, backend=Backend.JNP)
+FLA = DaismConfig(variant=Variant.FLA, backend=Backend.JNP)
+
+
+def _lenet_policies(smoke: bool) -> Dict[str, P.ApproxPolicy]:
+    pols = {
+        "exact": P.ApproxPolicy.uniform(P.EXACT, name="exact"),
+        "uniform_pc3_tr": P.ApproxPolicy.uniform(PC3_TR),
+        "mixed_ends_exact": P.parse_policy(
+            "cnn/c1=exact,@lm_head=exact,*=pc3_tr",
+            name="mixed_ends_exact"),
+    }
+    if not smoke:
+        pols["uniform_fla"] = P.ApproxPolicy.uniform(FLA)
+        pols["conv_exact_fc_approx"] = P.parse_policy(
+            "@conv=exact,*=pc3_tr", name="conv_exact_fc_approx")
+    return pols
+
+
+def _lm_policies(n_layers: int) -> Dict[str, P.ApproxPolicy]:
+    return {
+        "uniform_pc3_tr": P.ApproxPolicy.uniform(PC3_TR),
+        "first_last_exact": P.ApproxPolicy.first_last_exact(PC3_TR, n_layers),
+        "attention_exact": P.ApproxPolicy.attention_exact(PC3_TR),
+    }
+
+
+def _train_lenet(cfg, steps: int):
+    model = CNNModel(cfg)
+    params, _ = model.init(jax.random.PRNGKey(0))
+    opt = init_state(params)
+    ocfg = AdamWConfig(lr=1e-3, weight_decay=0.01)
+
+    @jax.jit
+    def step(params, opt, images, labels):
+        def loss_fn(p):
+            logits, _ = model.forward(p, {"images": images})
+            return classifier_loss(logits, labels)
+
+        loss, grads = jax.value_and_grad(loss_fn)(params)
+        params, opt, _ = apply_updates(params, grads, opt, ocfg)
+        return params, opt, loss
+
+    gen = image_batches(10, 64, shape=(28, 28, 1), noise=0.8, seed=0)
+    for _ in range(steps):
+        b = next(gen)
+        params, opt, _ = step(params, opt, jnp.asarray(b["images"]),
+                              jnp.asarray(b["labels"]))
+    return params
+
+
+def _accuracy(cfg, params, batches) -> float:
+    model = CNNModel(cfg)
+    correct = total = 0
+    for b in batches:
+        logits, _ = model.forward(params, {"images": jnp.asarray(b["images"])})
+        correct += (np.asarray(jnp.argmax(logits, -1)) == b["labels"]).sum()
+        total += len(b["labels"])
+    return correct / total
+
+
+def _energy_row(policy: P.ApproxPolicy):
+    used, exact = P.estimated_energy_uj(policy)
+    saving = 100 * (1 - used / exact) if exact else 0.0
+    return round(used, 3), round(saving, 1)
+
+
+def run(smoke: bool = False):
+    rows: List[Dict] = []
+
+    # ---- LeNet-5: train exact once, evaluate each policy ----------------
+    cfg = get_config("lenet5")
+    params = _train_lenet(cfg, steps=60 if smoke else 300)
+    test = eval_set(image_batches(10, 64, shape=(28, 28, 1), noise=0.8,
+                                  seed=99), 2 if smoke else 4)
+    lenet_acc: Dict[str, float] = {}
+    for name, pol in _lenet_policies(smoke).items():
+        P.clear_log(pol)
+        ecfg = cfg.with_policy(pol)
+        t0 = time.perf_counter()
+        acc = _accuracy(ecfg, params, test)
+        us = (time.perf_counter() - t0) * 1e6 / max(
+            sum(len(b["labels"]) for b in test), 1)
+        uj, saving = _energy_row(pol)
+        lenet_acc[name] = float(acc)
+        rows.append({"name": f"policy_lenet5_{name}",
+                     "us_per_call": round(us, 1),
+                     "accuracy": round(float(acc) * 100, 2),
+                     "energy_uj": uj, "energy_saving_pct": saving})
+
+    # ---- TinyLlama smoke: logit fidelity vs exact -----------------------
+    lm_cfg = get_config("tinyllama_1_1b").smoke(n_layers=4, vocab=128)
+    model = build_model(lm_cfg)
+    lm_params, _ = model.init(jax.random.PRNGKey(0))
+    toks = jax.random.randint(jax.random.PRNGKey(1), (2, 12), 0, lm_cfg.vocab)
+    exact_logits, _ = model.forward(lm_params, {"tokens": toks})
+    e = np.asarray(exact_logits, np.float32)
+    lm_corr: Dict[str, float] = {}
+    for name, pol in _lm_policies(lm_cfg.n_layers).items():
+        P.clear_log(pol)
+        t0 = time.perf_counter()
+        logits, _ = build_model(lm_cfg.with_policy(pol)).forward(
+            lm_params, {"tokens": toks})
+        us = (time.perf_counter() - t0) * 1e6 / toks.size
+        a = np.asarray(logits, np.float32)
+        corr = float(np.corrcoef(e.ravel(), a.ravel())[0, 1])
+        agree = float((e.argmax(-1) == a.argmax(-1)).mean())
+        uj, saving = _energy_row(pol)
+        lm_corr[name] = corr
+        rows.append({"name": f"policy_tinyllama_{name}",
+                     "us_per_call": round(us, 1),
+                     "logit_corr": round(corr, 4),
+                     "next_token_agreement": round(agree * 100, 1),
+                     "energy_uj": uj, "energy_saving_pct": saving})
+
+    by = {r["name"]: r for r in rows}
+    mixed = by["policy_lenet5_mixed_ends_exact"]
+    uni = by["policy_lenet5_uniform_pc3_tr"]
+    claims = {
+        # mixed policies sit between all-exact and all-approx on energy
+        "mixed_saves_energy": mixed["energy_saving_pct"] > 0,
+        "uniform_saves_more": (uni["energy_saving_pct"]
+                               >= mixed["energy_saving_pct"]),
+        # and cost no more accuracy than the uniform approximation
+        "mixed_accuracy_ge_uniform": (lenet_acc["mixed_ends_exact"]
+                                      >= lenet_acc["uniform_pc3_tr"] - 0.02),
+        # protecting first/last layers + lm_head improves logit fidelity
+        "first_last_exact_helps": (lm_corr["first_last_exact"]
+                                   >= lm_corr["uniform_pc3_tr"]),
+        "exact_baseline_sane": lenet_acc["exact"] > 0.3,
+    }
+    return rows, claims
+
+
+if __name__ == "__main__":
+    import argparse
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny sweep (CI): fewer steps/policies")
+    args = ap.parse_args()
+    rows, claims = run(smoke=args.smoke)
+    for r in rows:
+        print(r)
+    failed = [k for k, v in claims.items() if v is False]
+    print(claims)
+    if failed:
+        raise SystemExit(f"policy_sweep claims failed: {failed}")

@@ -13,7 +13,7 @@ import sys
 import time
 
 _MODULES = ("error_distance", "energy", "arch_cycles", "gemm_bench",
-            "accuracy", "serve_bench")
+            "accuracy", "policy_sweep", "serve_bench")
 
 
 def main() -> None:

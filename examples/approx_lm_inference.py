@@ -1,18 +1,28 @@
 """Serve a small LM with DAISM-approximate parameter GEMMs and compare
 generations + logit fidelity against the exact model — the paper's technique
-applied to a transformer (beyond the paper's CNNs).
+applied to a transformer (beyond the paper's CNNs), now driven through the
+per-site policy API (repro.policy): uniform variants first, then a mixed
+policy that keeps the sensitive sites (attention, first/last layer, lm_head)
+exact while the middle MLPs run approximate.
 
-Run:  PYTHONPATH=src python examples/approx_lm_inference.py
+Run:  PYTHONPATH=src python examples/approx_lm_inference.py [--policy SPEC]
 """
-import dataclasses
+import argparse
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import policy as P
 from repro.configs import get_config
 from repro.core import Backend, DaismConfig, Variant
 from repro.models.registry import build_model
+
+parser = argparse.ArgumentParser()
+parser.add_argument("--policy", default="",
+                    help="extra policy spec to evaluate, e.g. "
+                         "'*/attn/*=exact,*=pc3_tr'")
+args = parser.parse_args()
 
 cfg = get_config("tinyllama_1_1b").smoke(n_layers=4, vocab=128)
 model = build_model(cfg)
@@ -21,14 +31,34 @@ prompt = jax.random.randint(jax.random.PRNGKey(1), (2, 12), 0, cfg.vocab)
 
 logits_exact, _ = model.forward(params, {"tokens": prompt})
 
-for v in (Variant.FLA, Variant.PC3, Variant.PC3_TR):
-    c = dataclasses.replace(cfg, daism=DaismConfig(variant=v,
-                                                   backend=Backend.JNP))
-    logits_v, _ = build_model(c).forward(params, {"tokens": prompt})
+
+def fidelity(policy):
+    logits_v, _ = build_model(cfg.with_policy(policy)).forward(
+        params, {"tokens": prompt})
     e = np.asarray(logits_exact, np.float32).ravel()
     a = np.asarray(logits_v, np.float32).ravel()
     corr = np.corrcoef(e, a)[0, 1]
     agree = (np.asarray(jnp.argmax(logits_exact, -1))
              == np.asarray(jnp.argmax(logits_v, -1))).mean()
-    print(f"{v.value:8s} logit corr {corr:.4f}  next-token agreement "
-          f"{agree * 100:.1f}%")
+    return corr, agree
+
+
+pc3_tr = DaismConfig(variant=Variant.PC3_TR, backend=Backend.JNP)
+policies = [P.ApproxPolicy.uniform(
+    DaismConfig(variant=v, backend=Backend.JNP))
+    for v in (Variant.FLA, Variant.PC3, Variant.PC3_TR)]
+policies += [
+    P.ApproxPolicy.first_last_exact(pc3_tr, cfg.n_layers),
+    P.ApproxPolicy.attention_exact(pc3_tr),
+]
+if args.policy:
+    policies.append(P.parse_policy(args.policy))
+
+print(f"{'policy':26s} logit-corr  next-token agreement")
+for pol in policies:
+    corr, agree = fidelity(pol)
+    print(f"{pol.name:26s} {corr:10.4f}  {agree * 100:6.1f}%")
+
+# per-site resolution + energy estimate for the last mixed policy
+print()
+print(P.site_report(policies[-1]))

@@ -1,18 +1,21 @@
 """End-to-end driver: train LeNet-5 (~100k params) for a few hundred steps
 on synthetic MNIST, then evaluate under every DAISM multiplier — the paper's
-Table-2 experiment as a runnable example.
+Table-2 experiment as a runnable example — plus a *mixed* per-site policy
+(first conv + classifier head exact, middle layers PC3_tr) through the
+repro.policy API, with its per-site resolution/energy report.
 
 Run:  PYTHONPATH=src python examples/train_lenet_daism.py [--steps 300]
+      [--policy 'cnn/c1=exact,@lm_head=exact,*=pc3_tr']
 """
 import argparse
-import dataclasses
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import policy as P
 from repro.configs import get_config
-from repro.core import ALL_VARIANTS, Backend, DaismConfig, Variant
+from repro.core import ALL_VARIANTS, Backend, DaismConfig
 from repro.data.synthetic import eval_set, image_batches
 from repro.models.cnn import CNNModel
 from repro.models.registry import classifier_loss
@@ -20,6 +23,8 @@ from repro.optim import AdamWConfig, apply_updates, init_state
 
 p = argparse.ArgumentParser()
 p.add_argument("--steps", type=int, default=300)
+p.add_argument("--policy", default="cnn/c1=exact,@lm_head=exact,*=pc3_tr",
+               help="mixed per-site policy evaluated after the variant sweep")
 args = p.parse_args()
 
 cfg = get_config("lenet5")
@@ -62,9 +67,15 @@ def accuracy(cfg_eval):
     return correct / total
 
 
-print(f"\n{'multiplier':10s} accuracy")
-print(f"{'exact':10s} {accuracy(cfg) * 100:6.2f}%")
+print(f"\n{'multiplier':28s} accuracy")
+print(f"{'exact':28s} {accuracy(cfg) * 100:6.2f}%")
 for v in ALL_VARIANTS:
-    c = dataclasses.replace(cfg, daism=DaismConfig(variant=v,
-                                                   backend=Backend.JNP))
-    print(f"{v.value:10s} {accuracy(c) * 100:6.2f}%")
+    pol = P.ApproxPolicy.uniform(DaismConfig(variant=v, backend=Backend.JNP))
+    print(f"{v.value:28s} {accuracy(cfg.with_policy(pol)) * 100:6.2f}%")
+
+# mixed per-site policy: sensitive sites exact, middle approximate
+mixed = P.parse_policy(args.policy)
+print(f"{'mixed(' + args.policy + ')':28s} "
+      f"{accuracy(cfg.with_policy(mixed)) * 100:6.2f}%")
+print()
+print(P.site_report(mixed))

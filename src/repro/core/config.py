@@ -90,6 +90,29 @@ class DaismConfig:
     def __post_init__(self) -> None:
         if self.backward not in ("ste", "approx"):
             raise ValueError(f"backward must be 'ste'|'approx', got {self.backward}")
+        if self.accum_dtype not in _MANTISSA_BITS:
+            raise ValueError(
+                f"accum_dtype must be one of {sorted(_MANTISSA_BITS)}, got "
+                f"{self.accum_dtype!r}")
+        if self.k_chunk < 1:
+            raise ValueError(f"k_chunk must be >= 1, got {self.k_chunk}")
+        if min(self.block_m, self.block_n, self.block_k) < 1:
+            raise ValueError(
+                "pallas block sizes must be >= 1, got "
+                f"(block_m={self.block_m}, block_n={self.block_n}, "
+                f"block_k={self.block_k})")
+        if (self.backend is Backend.PALLAS and not self.exact
+                and self.backward == "approx"):
+            raise ValueError(
+                "backend 'pallas' has no approximate backward kernel; use "
+                "backward='ste' (exact gradients) or backend='jnp'")
+
+    def validate_for_dtype(self, dtype, *, site: str = "") -> None:
+        """Check this config can run on ``dtype`` operands (actionable error
+        instead of a deep-kernel failure); see policy.dispatch."""
+        from repro.policy.dispatch import validate_for_dtype
+
+        validate_for_dtype(self, dtype, site=site)
 
     @property
     def exact(self) -> bool:

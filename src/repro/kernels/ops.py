@@ -7,15 +7,10 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.bitops import round_up as _round_up
-from repro.core.config import DaismConfig, Variant
+from repro.core.config import DaismConfig
+from repro.policy.dispatch import auto_interpret as _auto_interpret
 
 from .daism_matmul import daism_matmul_kernel
-
-
-def _auto_interpret(cfg: DaismConfig) -> bool:
-    if cfg.interpret is not None:
-        return cfg.interpret
-    return jax.default_backend() == "cpu"
 
 
 @functools.partial(jax.jit, static_argnums=(2,))

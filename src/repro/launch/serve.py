@@ -8,12 +8,16 @@ decode step across all slots per token, finished sequences retire and
 waiting requests join the running batch mid-stream. Prints the per-request
 timeline and the engine's latency/throughput report.
 
-``--variant pc3_tr`` serves with the DAISM approximate GEMM (paper §5
-inference path); see benchmarks/serve_bench.py for exact-vs-approx numbers.
+``--policy "*/attn/*=exact,*=pc3_tr"`` serves with per-site DAISM numerics
+(repro.policy); the legacy ``--variant pc3_tr`` flag still works through the
+uniform-policy deprecation shim. After the run the per-site resolution
+report (variant + estimated multiply energy per site) is printed. See
+benchmarks/serve_bench.py and benchmarks/policy_sweep.py for numbers.
 """
 import argparse
 import dataclasses
 import os
+import warnings
 
 
 def build_daism(variant: str, backend: str):
@@ -37,8 +41,13 @@ def main(argv=None):
                    help="base generation length")
     p.add_argument("--arrival-every", type=int, default=0,
                    help="space arrivals N engine steps apart (0 = all at once)")
+    p.add_argument("--policy", default="",
+                   help="per-site approximation policy spec, e.g. "
+                        "'*/attn/*=exact,*/layer_0/*=exact,*=pc3_tr' "
+                        "(repro.policy mini-language)")
     p.add_argument("--variant", default="exact",
-                   help="daism multiplier variant (exact | fla | ... | pc3_tr)")
+                   help="DEPRECATED (use --policy): uniform multiplier "
+                        "variant (exact | fla | ... | pc3_tr)")
     p.add_argument("--backend", default="jnp",
                    help="daism backend for approximate variants")
     p.add_argument("--seed", type=int, default=0)
@@ -58,7 +67,12 @@ def main(argv=None):
     cfg = get_config(args.arch)
     if args.smoke:
         cfg = cfg.smoke(window=0)  # slot pools need non-ring caches
-    if args.variant != "exact":
+    if args.policy:
+        cfg = cfg.with_policy(args.policy)
+    elif args.variant != "exact":
+        warnings.warn("--variant/--backend are deprecated; use --policy "
+                      f"'*={args.variant}:{args.backend}'", DeprecationWarning,
+                      stacklevel=1)
         cfg = dataclasses.replace(cfg,
                                   daism=build_daism(args.variant, args.backend))
     model = build_model(cfg)
@@ -71,7 +85,8 @@ def main(argv=None):
         base_gen=args.gen, seed=args.seed, arrival_every=args.arrival_every)
     report = engine.run(requests)
 
-    print(f"== {args.arch} ({args.variant}) — {args.requests} requests over "
+    numerics = f"policy {args.policy}" if args.policy else args.variant
+    print(f"== {args.arch} ({numerics}) — {args.requests} requests over "
           f"{args.slots} slots ==")
     for ev in report.events:
         if ev["event"] == "admit":
@@ -82,6 +97,8 @@ def main(argv=None):
             print(f"step {ev['step']:4d}  retire req {ev['request_id']} "
                   f"(slot {ev['slot']} freed, {ev['reason']})")
     print(report.summary())
+    if args.policy or args.variant != "exact":
+        print(engine.resolution_report())
     if report.completed:
         sample = report.completed[0]
         print(f"sample (req {sample.request_id}): {sample.output}")

@@ -30,8 +30,12 @@ def main(argv=None):
     p.add_argument("--mesh", default="auto",
                    help="'auto' | 'DATAxMODEL' e.g. 4x2")
     p.add_argument("--daism", default="exact",
-                   help="multiplier variant for parameter GEMMs "
+                   help="DEPRECATED (use --policy): uniform multiplier "
+                        "variant for parameter GEMMs "
                         "(exact|fla|hla|pc2|pc3|pc2_tr|pc3_tr)")
+    p.add_argument("--policy", default="",
+                   help="per-site approximation policy spec, e.g. "
+                        "'*/layer_0/*=exact,@lm_head=exact,*=pc3_tr'")
     args = p.parse_args(argv)
 
     if args.devices:
@@ -52,7 +56,13 @@ def main(argv=None):
     cfg = get_config(args.arch)
     if args.smoke:
         cfg = cfg.smoke()
-    if args.daism != "exact":
+    if args.policy:
+        cfg = cfg.with_policy(args.policy)
+    elif args.daism != "exact":
+        import warnings
+
+        warnings.warn("--daism is deprecated; use --policy "
+                      f"'*={args.daism}'", DeprecationWarning, stacklevel=1)
         cfg = dataclasses.replace(
             cfg, daism=DaismConfig(variant=Variant(args.daism),
                                    backend=Backend.JNP))
@@ -87,6 +97,10 @@ def main(argv=None):
                              param_shardings=art.param_shardings,
                              opt_shardings=art.opt_shardings)
     print(f"done at step {state.step}; stragglers seen: {state.stragglers}")
+    if args.policy or args.daism != "exact":
+        from repro.policy import site_report
+
+        print(site_report(cfg.approx_policy))
 
 
 if __name__ == "__main__":

@@ -13,8 +13,7 @@ import jax
 import jax.numpy as jnp
 from jax import lax
 
-from repro.core.gemm import conv2d_im2col, daism_dot
-from repro.core.config import DaismConfig
+from repro.policy import OpKind, policy_conv2d, policy_dot, site_scope
 
 from .common import ArchConfig
 from .module import Ctx, he_init, lecun_init, zeros_init
@@ -27,20 +26,20 @@ def _conv(ctx: Ctx, name: str, x, cout: int, cfg: ArchConfig, *, k: int = 3,
                   init or lecun_init(), axes=(None, None, None, None))
     b = ctx.param(name + "_b", (cout,), cfg.param_dtype, zeros_init(),
                   axes=(None,))
-    y = conv2d_im2col(x, w.astype(x.dtype), cfg.daism, padding="SAME")
-    return y.astype(x.dtype) + b.astype(x.dtype)
+    y = policy_conv2d(cfg.approx_policy, x, w, name=name, padding="SAME",
+                      record=ctx.mode == "apply")
+    return y + b.astype(x.dtype)
 
 
-def _fc(ctx: Ctx, name: str, x, dout: int, cfg: ArchConfig):
+def _fc(ctx: Ctx, name: str, x, dout: int, cfg: ArchConfig,
+        kind: OpKind = OpKind.DENSE):
     din = x.shape[-1]
     w = ctx.param(name, (din, dout), cfg.param_dtype, lecun_init(),
                   axes=(None, None))
     b = ctx.param(name + "_b", (dout,), cfg.param_dtype, zeros_init(),
                   axes=(None,))
-    if cfg.daism.exact:
-        y = jnp.dot(x, w.astype(x.dtype))
-    else:
-        y = daism_dot(x, w, cfg.daism).astype(x.dtype)
+    y = policy_dot(cfg.approx_policy, x, w, name=name, kind=kind,
+                   record=ctx.mode == "apply")
     return y + b.astype(x.dtype)
 
 
@@ -59,7 +58,8 @@ def lenet5(ctx: Ctx, images: jnp.ndarray, cfg: ArchConfig) -> jnp.ndarray:
     x = x.reshape(x.shape[0], -1)
     x = jnp.tanh(_fc(ctx, "f1", x, 120, cfg))
     x = jnp.tanh(_fc(ctx, "f2", x, 84, cfg))
-    return _fc(ctx, "out", x, cfg.vocab, cfg).astype(jnp.float32)
+    return _fc(ctx, "out", x, cfg.vocab, cfg,
+               kind=OpKind.LM_HEAD).astype(jnp.float32)
 
 
 _VGG16 = (64, 64, "P", 128, 128, "P", 256, 256, 256, "P",
@@ -81,7 +81,8 @@ def _vgg(ctx: Ctx, images, cfg: ArchConfig, plan: Sequence, fc_dim: int):
             i += 1
     x = x.reshape(x.shape[0], -1)
     x = jax.nn.relu(_fc(ctx, "f1", x, fc_dim, cfg))
-    return _fc(ctx, "out", x, cfg.vocab, cfg).astype(jnp.float32)
+    return _fc(ctx, "out", x, cfg.vocab, cfg,
+               kind=OpKind.LM_HEAD).astype(jnp.float32)
 
 
 def vgg16(ctx: Ctx, images, cfg: ArchConfig):
@@ -108,7 +109,9 @@ class CNNModel:
 
         def build(rng_):
             ctx = Ctx("init", rng=rng_)
-            self.fn(ctx, jnp.zeros(shape, self.cfg.compute_dtype), self.cfg)
+            with site_scope("cnn"):
+                self.fn(ctx, jnp.zeros(shape, self.cfg.compute_dtype),
+                        self.cfg)
             return ctx.params, ctx.axes
 
         if abstract:
@@ -124,4 +127,6 @@ class CNNModel:
 
     def forward(self, params, batch):
         ctx = Ctx("apply", params=params)
-        return self.fn(ctx, batch["images"], self.cfg), jnp.zeros((), jnp.float32)
+        with site_scope("cnn"):
+            out = self.fn(ctx, batch["images"], self.cfg)
+        return out, jnp.zeros((), jnp.float32)

@@ -5,6 +5,7 @@ import dataclasses
 from typing import Optional, Tuple
 
 from repro.core.config import Backend, DaismConfig, Variant
+from repro.policy import ApproxPolicy, parse_policy, validate_for_dtype
 
 EXACT = DaismConfig(variant=Variant.EXACT, backend=Backend.EXACT)
 
@@ -54,9 +55,44 @@ class ArchConfig:
     compute_dtype: str = "bfloat16"
     attn_score_dtype: str = "float32"   # bfloat16 halves attention traffic
     rnn_state_dtype: str = "float32"
+    # DEPRECATED: one global config for every GEMM. Kept as a shim — when
+    # ``policy`` is unset it is wrapped into a uniform one-rule policy by
+    # ``approx_policy``. New code should set ``policy`` instead.
     daism: DaismConfig = EXACT
+    # Per-site approximation policy (repro.policy). Takes precedence over
+    # ``daism`` when set.
+    policy: Optional[ApproxPolicy] = None
     remat: str = "none"       # none | dots | full
     scan_layers: bool = True
+
+    def __post_init__(self) -> None:
+        # fail at construction, not deep inside a kernel trace: every config
+        # a site can resolve to must be runnable on the compute dtype
+        for where, dcfg in self._numerics_configs():
+            validate_for_dtype(dcfg, self.compute_dtype, site=where)
+
+    def _numerics_configs(self):
+        if self.policy is not None:
+            for r in self.policy.rules:
+                yield f"{self.name}:policy[{r.pattern}]", r.config
+            yield f"{self.name}:policy[default]", self.policy.default
+        else:
+            yield f"{self.name}:daism", self.daism
+
+    @property
+    def approx_policy(self) -> ApproxPolicy:
+        """The effective policy: ``policy`` if set, else the deprecation shim
+        wrapping the legacy ``daism`` field as a uniform one-rule policy."""
+        if self.policy is not None:
+            return self.policy
+        return ApproxPolicy.uniform(self.daism)
+
+    def with_policy(self, policy) -> "ArchConfig":
+        """Return a copy using ``policy`` (an ApproxPolicy or a spec string
+        like ``"*/attn/*=exact,*=pc3_tr"``)."""
+        if isinstance(policy, str):
+            policy = parse_policy(policy)
+        return dataclasses.replace(self, policy=policy)
 
     @property
     def q_dim(self) -> int:

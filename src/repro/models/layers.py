@@ -1,8 +1,9 @@
 """Common neural layers with pluggable (exact | DAISM) matmul backend.
 
-Every parameter GEMM routes through :func:`dense`, which dispatches to the
-DAISM approximate GEMM when the architecture config carries a non-exact
-``DaismConfig`` — the paper's technique as a first-class framework feature
+Every parameter GEMM routes through :func:`dense`, which resolves its
+numerics per op-site through the architecture's injectable approximation
+policy (``cfg.approx_policy``, see :mod:`repro.policy`) — the paper's
+technique as a first-class framework feature, addressable per layer
 (DESIGN.md §2). Dynamic attention GEMMs (qk^T, att@v) stay exact: DAISM
 multiplies a *stationary* SRAM-resident operand (weights) against streamed
 inputs; neither attention operand is stationary.
@@ -17,9 +18,9 @@ import jax.numpy as jnp
 import numpy as np
 from jax import lax
 
-from repro.core.gemm import daism_dot
 from repro.parallel.sharding import constrain
 from repro.parallel.unroll import unroll_for
+from repro.policy import OpKind, policy_dot
 
 from .common import ArchConfig
 from .module import Ctx, lecun_init, normal_init, ones_init, zeros_init
@@ -30,14 +31,14 @@ from .module import Ctx, lecun_init, normal_init, ones_init, zeros_init
 
 def dense(ctx: Ctx, name: str, x: jnp.ndarray, d_out: int, cfg: ArchConfig,
           *, axes=("embed", "mlp"), use_bias: bool = False,
-          init=None) -> jnp.ndarray:
+          init=None, kind: OpKind = OpKind.DENSE) -> jnp.ndarray:
     d_in = x.shape[-1]
     w = ctx.param(name, (d_in, d_out), cfg.param_dtype,
                   init or lecun_init(), axes=axes)
-    if cfg.daism.exact:
-        out = jnp.dot(x, w.astype(x.dtype))
-    else:
-        out = daism_dot(x, w, cfg.daism).astype(x.dtype)
+    # init-mode traces run outside the model's site scopes (their outputs
+    # are discarded), so only apply-mode resolutions are recorded
+    out = policy_dot(cfg.approx_policy, x, w, name=name, kind=kind,
+                     record=ctx.mode == "apply")
     if use_bias:
         b = ctx.param(name + "_b", (d_out,), cfg.param_dtype, zeros_init(),
                       axes=(axes[-1],))
@@ -302,9 +303,11 @@ def unembed(ctx: Ctx, x: jnp.ndarray, cfg: ArchConfig) -> jnp.ndarray:
     if cfg.tie_embeddings:
         e = ctx.param("embedding", (cfg.vocab, cfg.d_model), cfg.param_dtype,
                       normal_init(1.0), axes=("vocab", "embed"))
-        logits = jnp.dot(x, e.T.astype(x.dtype))
+        logits = policy_dot(cfg.approx_policy, x, e.T, name="lm_head",
+                            kind=OpKind.LM_HEAD,
+                            record=ctx.mode == "apply")
     else:
         logits = dense(ctx, "lm_head", x, cfg.vocab, cfg,
-                       axes=("embed", "vocab"))
+                       axes=("embed", "vocab"), kind=OpKind.LM_HEAD)
     return constrain(logits, ("act_batch", "act_seq", "act_vocab"))
 

@@ -23,6 +23,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.policy.sites import site_scope
+
 Params = Dict[str, Any]
 Axes = Tuple[Optional[str], ...]
 
@@ -92,9 +94,12 @@ class Ctx:
 
     @contextlib.contextmanager
     def scope(self, name: str):
+        """Parameter scope; also mirrored onto the op-site path stack so
+        site paths (repro.policy.sites) track parameter paths."""
         self._path.append(name)
         try:
-            yield self
+            with site_scope(name):
+                yield self
         finally:
             self._path.pop()
 

@@ -27,20 +27,19 @@ from jax import lax
 from jax.sharding import PartitionSpec as P
 
 from repro.compat import shard_map
-from repro.core.gemm import daism_matmul
 from repro.parallel.sharding import current_sharder
+from repro.policy import policy_expert_matmul
 
 from .common import ArchConfig
 from .layers import activate
 from .module import Ctx, lecun_init
 
 
-def _expert_mm(x: jnp.ndarray, w: jnp.ndarray, cfg: ArchConfig) -> jnp.ndarray:
-    """(E, C, d) x (E, d, f) -> (E, C, f), routed through DAISM if enabled."""
-    if cfg.daism.exact:
-        return jnp.einsum("ecd,edf->ecf", x, w.astype(x.dtype))
-    return jax.vmap(lambda xe, we: daism_matmul(xe, we, cfg.daism))(
-        x, w).astype(x.dtype)
+def _expert_mm(x: jnp.ndarray, w: jnp.ndarray, cfg: ArchConfig,
+               name: str, record: bool = True) -> jnp.ndarray:
+    """(E, C, d) x (E, d, f) -> (E, C, f), per-site DAISM via the policy."""
+    return policy_expert_matmul(cfg.approx_policy, x, w, name=name,
+                                record=record)
 
 
 def _route(x2d: jnp.ndarray, router_w: jnp.ndarray, cfg: ArchConfig):
@@ -63,7 +62,7 @@ def _capacity(tokens: int, cfg: ArchConfig) -> int:
 
 
 def _local_dispatch_compute(x2d, ids, probs, w_in, w_gate, w_out, e0: int,
-                            cfg: ArchConfig):
+                            cfg: ArchConfig, record: bool = True):
     """Dispatch local tokens to the E_local experts [e0, e0+E_local), run
     them, and return the (partial) combined output (T, d)."""
     t, d = x2d.shape
@@ -88,10 +87,10 @@ def _local_dispatch_compute(x2d, ids, probs, w_in, w_gate, w_out, e0: int,
     buf = buf[:, :cap]                               # (E_local, cap, d)
 
     gated = cfg.act in ("swiglu", "geglu")
-    h = _expert_mm(buf, w_in, cfg)
-    g = _expert_mm(buf, w_gate, cfg) if gated else None
+    h = _expert_mm(buf, w_in, cfg, "w_in", record)
+    g = _expert_mm(buf, w_gate, cfg, "w_gate", record) if gated else None
     h = activate(h, g, cfg.act)
-    y = _expert_mm(h, w_out, cfg)                    # (E_local, cap, d)
+    y = _expert_mm(h, w_out, cfg, "w_out", record)   # (E_local, cap, d)
 
     y = jnp.pad(y, ((0, 0), (0, 1), (0, 0)))         # restore trash row
     out_slots = y[le_safe, pos_safe]                 # (T*k, d)
@@ -117,6 +116,7 @@ def moe_ffn(ctx: Ctx, x: jnp.ndarray, cfg: ArchConfig
     w_out = ctx.param("w_out", (cfg.n_experts, ff, d), cfg.param_dtype,
                       lecun_init(), axes=("expert", "expert_mlp", "embed"))
 
+    record = ctx.mode == "apply"  # init traces run outside the site scopes
     sharder = current_sharder()
     use_ep = (cfg.moe_impl == "ep" and sharder is not None
               and "model" in sharder.mesh.axis_names
@@ -130,7 +130,7 @@ def moe_ffn(ctx: Ctx, x: jnp.ndarray, cfg: ArchConfig
                   and ff % dp_size == 0)
 
     if not use_ep:
-        return _dense_moe(x, router_w, w_in, w_gate, w_out, cfg)
+        return _dense_moe(x, router_w, w_in, w_gate, w_out, cfg, record)
     n_model = mesh.shape["model"]
     b, s, _ = x.shape
 
@@ -151,7 +151,7 @@ def moe_ffn(ctx: Ctx, x: jnp.ndarray, cfg: ArchConfig
         rank = lax.axis_index("model")
         e0 = rank * (cfg.n_experts // n_model)
         out = _local_dispatch_compute(x2d, ids, probs, w_in_f, w_gate_f,
-                                      w_out_f, e0, cfg)
+                                      w_out_f, e0, cfg, record)
         out = lax.psum(out, "model")
         aux = lax.pmean(aux, "model")
         for a in dp_axes:
@@ -172,18 +172,22 @@ def moe_ffn(ctx: Ctx, x: jnp.ndarray, cfg: ArchConfig
     return out, aux
 
 
-def _dense_moe(x, router_w, w_in, w_gate, w_out, cfg: ArchConfig):
-    """Reference: all experts on all tokens, top-k gate-weighted."""
+def _dense_moe(x, router_w, w_in, w_gate, w_out, cfg: ArchConfig,
+               record: bool = True):
+    """Reference: all experts on all tokens, top-k gate-weighted. Expert
+    GEMMs go through the same per-site policy as the EP path (every expert
+    sees every token, so the broadcast (E, T, d) operand is the einsum's
+    own working set)."""
     b, s, d = x.shape
     x2d = x.reshape(-1, d)
     ids, probs, aux = _route(x2d, router_w, cfg)
     gate_full = jnp.zeros((x2d.shape[0], cfg.n_experts), jnp.float32
                           ).at[jnp.arange(x2d.shape[0])[:, None], ids].set(probs)
     gated = cfg.act in ("swiglu", "geglu")
-    h = jnp.einsum("td,edf->tef", x2d, w_in.astype(x2d.dtype))
-    g = (jnp.einsum("td,edf->tef", x2d, w_gate.astype(x2d.dtype))
-         if gated else None)
+    xb = jnp.broadcast_to(x2d[None], (cfg.n_experts,) + x2d.shape)
+    h = _expert_mm(xb, w_in, cfg, "w_in", record)                 # (E, T, f)
+    g = _expert_mm(xb, w_gate, cfg, "w_gate", record) if gated else None
     h = activate(h, g, cfg.act)
-    y = jnp.einsum("tef,efd->ted", h, w_out.astype(h.dtype))
-    out = jnp.einsum("ted,te->td", y.astype(jnp.float32), gate_full)
+    y = _expert_mm(h, w_out, cfg, "w_out", record)                # (E, T, d)
+    out = jnp.einsum("etd,te->td", y.astype(jnp.float32), gate_full)
     return out.astype(x.dtype).reshape(b, s, d), aux

@@ -16,6 +16,7 @@ from jax import lax
 
 from repro.parallel.sharding import constrain
 from repro.parallel.unroll import unroll_for
+from repro.policy import OpKind, plan_segments, site_scope
 
 from .common import ArchConfig
 from .layers import (cross_attention, dense, embed, mlp, norm,
@@ -24,6 +25,41 @@ from .module import Ctx, apply_model, init_model
 from .moe import moe_ffn
 
 Params = Dict[str, Any]
+
+
+# ---------------------------------------------------------------------------
+# Op-site probes (policy segmentation)
+# ---------------------------------------------------------------------------
+
+def mlp_sites(cfg: ArchConfig, base: str):
+    """(path, kind) probe sites of one dense MLP under ``base``."""
+    names = ("wi", "wg", "wo") if cfg.act in ("swiglu", "geglu") else \
+        ("wi", "wo")
+    return [(f"{base}/{n}", OpKind.DENSE) for n in names]
+
+
+def attn_sites(base: str):
+    return [(f"{base}/{n}", OpKind.DENSE) for n in ("wq", "wk", "wv", "wo")]
+
+
+def decoder_block_sites(cfg: ArchConfig, i: int, prefix: str = "decoder"):
+    """Every contraction site of decoder layer ``i`` — must mirror the paths
+    the traced block produces (Ctx scopes + dense leaf names)."""
+    base = f"{prefix}/layer_{i}"
+    sites = attn_sites(f"{base}/attn")
+    if cfg.n_experts:
+        names = ("w_in", "w_gate", "w_out") if cfg.act in ("swiglu", "geglu") \
+            else ("w_in", "w_out")
+        sites += [(f"{base}/ffn/{n}", OpKind.MOE_EXPERT) for n in names]
+    else:
+        sites += mlp_sites(cfg, f"{base}/ffn")
+    return sites
+
+
+def clip_segments(segments, lo: int, hi: int):
+    """Intersect policy segments with the layer range [lo, hi)."""
+    return tuple((max(a, lo), min(b, hi))
+                 for a, b in segments if a < hi and b > lo)
 
 
 # ---------------------------------------------------------------------------
@@ -125,6 +161,37 @@ def scan_layers(layer_fn, stacked_params, x, *, cache=None,
     return x, new_cache, aux
 
 
+def scan_policy_segments(layer_fn, stacked_params, x, *, segments,
+                         base: int = 0, cache=None, remat: str = "none",
+                         prefix: str = "layer", **kw):
+    """Run consecutive ``scan_layers`` segments, one per policy segment.
+
+    ``segments`` are (lo, hi) *global* layer ranges (plan_segments); the
+    stacked params/cache are indexed relative to ``base`` (the global index
+    of their row 0). Each segment is traced under the site scope
+    ``{prefix}_{lo}``, so per-depth policy rules resolve against the
+    segment's first layer — valid because every layer in a segment resolves
+    identically by construction. A uniform policy yields one segment and
+    the exact HLO the un-segmented scan produced.
+    """
+    aux_total = jnp.zeros((), jnp.float32)
+    parts = []
+    for lo, hi in segments:
+        sub = jax.tree.map(lambda p: p[lo - base:hi - base], stacked_params)
+        subc = (None if cache is None else
+                jax.tree.map(lambda c: c[lo - base:hi - base], cache))
+        with site_scope(f"{prefix}_{lo}", repeat=hi - lo):
+            x, nc, aux = scan_layers(layer_fn, sub, x, cache=subc,
+                                     remat=remat, **kw)
+        aux_total = aux_total + aux
+        parts.append(nc)
+    new_cache = None
+    if cache is not None:
+        new_cache = (parts[0] if len(parts) == 1 else
+                     jax.tree.map(lambda *t: jnp.concatenate(t, 0), *parts))
+    return x, new_cache, aux_total
+
+
 # ---------------------------------------------------------------------------
 # Decoder-only LM (dense + MoE + VLM)
 # ---------------------------------------------------------------------------
@@ -135,6 +202,10 @@ class DecoderLM:
     def __init__(self, cfg: ArchConfig):
         self.cfg = cfg
         self.is_vlm = cfg.cross_every > 0
+        # maximal layer runs with identical resolved numerics (one scan each)
+        self.segments = plan_segments(
+            cfg.approx_policy,
+            functools.partial(decoder_block_sites, cfg), 0, cfg.n_layers)
 
     # -- init ------------------------------------------------------------
     def init(self, rng, *, abstract: bool = False):
@@ -195,32 +266,38 @@ class DecoderLM:
         b, s = tokens.shape
         positions = jnp.arange(s)
         ctx = Ctx("apply", params=params)
-        x = embed(ctx, tokens, cfg)
 
         layer = functools.partial(decoder_block, positions=positions,
                                   causal=True)
         layer_fn = lambda c, xx, cache=None: layer(c, cfg, xx, cache=cache)
 
-        if not self.is_vlm:
-            x, _, aux = scan_layers(layer_fn, params["blocks"], x,
-                                    remat=cfg.remat)
-        else:
-            img = batch["image_embeds"].astype(x.dtype)
-            aux = jnp.zeros((), jnp.float32)
-            per = cfg.cross_every
-            for g in range(self.n_cross):
-                sub = jax.tree.map(lambda p: p[g * per:(g + 1) * per],
-                                   params["blocks"])
-                x, _, a = scan_layers(layer_fn, sub, x, remat=cfg.remat)
-                aux = aux + a
-                cparams = jax.tree.map(lambda p: p[g], params["cross_blocks"])
-                cross_fn = apply_remat(
-                    lambda cp, xx: apply_model(
-                        lambda c, h: cross_block(c, cfg, h, img), cp, xx),
-                    cfg.remat)
-                x = cross_fn(cparams, x)
-        x = norm(ctx, "final_ln", x, cfg)
-        logits = unembed(ctx, x, cfg)
+        with site_scope("decoder"):
+            x = embed(ctx, tokens, cfg)
+            if not self.is_vlm:
+                x, _, aux = scan_policy_segments(
+                    layer_fn, params["blocks"], x, segments=self.segments,
+                    remat=cfg.remat)
+            else:
+                img = batch["image_embeds"].astype(x.dtype)
+                aux = jnp.zeros((), jnp.float32)
+                per = cfg.cross_every
+                for g in range(self.n_cross):
+                    x, _, a = scan_policy_segments(
+                        layer_fn, params["blocks"], x,
+                        segments=clip_segments(self.segments, g * per,
+                                               (g + 1) * per),
+                        remat=cfg.remat)
+                    aux = aux + a
+                    cparams = jax.tree.map(lambda p: p[g],
+                                           params["cross_blocks"])
+                    cross_fn = apply_remat(
+                        lambda cp, xx: apply_model(
+                            lambda c, h: cross_block(c, cfg, h, img), cp, xx),
+                        cfg.remat)
+                    with site_scope(f"cross_{g}"):
+                        x = cross_fn(cparams, x)
+            x = norm(ctx, "final_ln", x, cfg)
+            logits = unembed(ctx, x, cfg)
         return logits, aux
 
     # -- KV cache ----------------------------------------------------------
@@ -254,7 +331,6 @@ class DecoderLM:
         (shared, legacy) or a (B,) vector (per-slot serving cache)."""
         cfg = self.cfg
         ctx = Ctx("apply", params=params)
-        x = embed(ctx, tokens, cfg)
 
         ring = "abs_pos" in cache
         layer_cache = {"k": cache["k"], "v": cache["v"]}
@@ -268,27 +344,33 @@ class DecoderLM:
             nc.pop("pos")
             return xx, nc, aux
 
-        if not self.is_vlm:
-            x, new_lc, _ = scan_layers(layer_fn, params["blocks"], x,
-                                       cache=layer_cache)
-        else:
-            img = image_embeds.astype(x.dtype)
-            per = cfg.cross_every
-            new_parts = []
-            for g in range(self.n_cross):
-                sub = jax.tree.map(lambda p: p[g * per:(g + 1) * per],
-                                   params["blocks"])
-                subc = jax.tree.map(lambda c: c[g * per:(g + 1) * per],
-                                    layer_cache)
-                x, nc, _ = scan_layers(layer_fn, sub, x, cache=subc)
-                new_parts.append(nc)
-                cparams = jax.tree.map(lambda p: p[g], params["cross_blocks"])
-                x = apply_model(lambda c, xx: cross_block(c, cfg, xx, img),
-                                cparams, x)
-            new_lc = jax.tree.map(lambda *xs: jnp.concatenate(xs, 0),
-                                  *new_parts)
-        x = norm(ctx, "final_ln", x, cfg)
-        logits = unembed(ctx, x, cfg)
+        with site_scope("decoder"):
+            x = embed(ctx, tokens, cfg)
+            if not self.is_vlm:
+                x, new_lc, _ = scan_policy_segments(
+                    layer_fn, params["blocks"], x, segments=self.segments,
+                    cache=layer_cache)
+            else:
+                img = image_embeds.astype(x.dtype)
+                per = cfg.cross_every
+                new_parts = []
+                for g in range(self.n_cross):
+                    x, nc, _ = scan_policy_segments(
+                        layer_fn, params["blocks"], x,
+                        segments=clip_segments(self.segments, g * per,
+                                               (g + 1) * per),
+                        cache=layer_cache)
+                    new_parts.append(nc)
+                    cparams = jax.tree.map(lambda p: p[g],
+                                           params["cross_blocks"])
+                    with site_scope(f"cross_{g}"):
+                        x = apply_model(
+                            lambda c, xx: cross_block(c, cfg, xx, img),
+                            cparams, x)
+                new_lc = jax.tree.map(lambda *xs: jnp.concatenate(xs, 0),
+                                      *new_parts)
+            x = norm(ctx, "final_ln", x, cfg)
+            logits = unembed(ctx, x, cfg)
         return logits, new_lc
 
     # -- decode (one token, KV cache) --------------------------------------
@@ -367,12 +449,30 @@ def encdec_decoder_block(ctx: Ctx, cfg: ArchConfig, x, *, positions,
     return x, new_cache, jnp.zeros((), jnp.float32)
 
 
+def encoder_block_sites(cfg: ArchConfig, i: int):
+    base = f"encoder/layer_{i}"
+    return attn_sites(f"{base}/attn") + mlp_sites(cfg, f"{base}/ffn")
+
+
+def encdec_decoder_sites(cfg: ArchConfig, i: int):
+    base = f"decoder/layer_{i}"
+    return (attn_sites(f"{base}/attn") + attn_sites(f"{base}/xattn")
+            + mlp_sites(cfg, f"{base}/ffn"))
+
+
 class EncDecLM:
     """Whisper-style: transformer encoder over precomputed frame embeddings,
     causal decoder with per-layer cross attention."""
 
     def __init__(self, cfg: ArchConfig):
         self.cfg = cfg
+        pol = cfg.approx_policy
+        self.enc_segments = plan_segments(
+            pol, functools.partial(encoder_block_sites, cfg),
+            0, cfg.enc_layers)
+        self.dec_segments = plan_segments(
+            pol, functools.partial(encdec_decoder_sites, cfg),
+            0, cfg.n_layers)
 
     def init(self, rng, *, abstract: bool = False):
         def build(rng_):
@@ -425,8 +525,10 @@ class EncDecLM:
         positions = jnp.arange(frames.shape[1])
         enc_fn = lambda c, xx, cache=None: encoder_block(
             c, cfg, xx, positions=positions)
-        x, _, _ = scan_layers(enc_fn, params["enc_blocks"], x,
-                              remat=cfg.remat)
+        with site_scope("encoder"):
+            x, _, _ = scan_policy_segments(
+                enc_fn, params["enc_blocks"], x, segments=self.enc_segments,
+                remat=cfg.remat)
         return x
 
     def forward(self, params, batch):
@@ -435,13 +537,16 @@ class EncDecLM:
         tokens = batch["tokens"]
         positions = jnp.arange(tokens.shape[1])
         ctx = Ctx("apply", params=params)
-        x = embed(ctx, tokens, cfg)
         dec_fn = lambda c, xx, cache=None: encdec_decoder_block(
             c, cfg, xx, positions=positions, enc_kv=enc)
-        x, _, _ = scan_layers(dec_fn, params["dec_blocks"], x,
-                              remat=cfg.remat)
-        x = norm(ctx, "final_ln", x, cfg)
-        return unembed(ctx, x, cfg), jnp.zeros((), jnp.float32)
+        with site_scope("decoder"):
+            x = embed(ctx, tokens, cfg)
+            x, _, _ = scan_policy_segments(
+                dec_fn, params["dec_blocks"], x, segments=self.dec_segments,
+                remat=cfg.remat)
+            x = norm(ctx, "final_ln", x, cfg)
+            logits = unembed(ctx, x, cfg)
+        return logits, jnp.zeros((), jnp.float32)
 
     def init_cache(self, batch_size: int, max_seq: int, *,
                    abstract: bool = False):
@@ -467,7 +572,6 @@ class EncDecLM:
         positions = pos[None].reshape(1,)
         enc = cache["enc"]
         ctx = Ctx("apply", params=params)
-        x = embed(ctx, tokens, cfg)
 
         def layer_fn(c, xx, cache=None):
             lc = dict(k=cache["k"], v=cache["v"], pos=pos)
@@ -475,9 +579,13 @@ class EncDecLM:
                 c, cfg, xx, positions=positions, enc_kv=enc, cache=lc)
             return xx, {"k": nc["k"], "v": nc["v"]}, aux
 
-        x, new_lc, _ = scan_layers(layer_fn, params["dec_blocks"], x,
-                                   cache={"k": cache["k"], "v": cache["v"]})
-        x = norm(ctx, "final_ln", x, cfg)
-        logits = unembed(ctx, x, cfg)
+        with site_scope("decoder"):
+            x = embed(ctx, tokens, cfg)
+            x, new_lc, _ = scan_policy_segments(
+                layer_fn, params["dec_blocks"], x,
+                segments=self.dec_segments,
+                cache={"k": cache["k"], "v": cache["v"]})
+            x = norm(ctx, "final_ln", x, cfg)
+            logits = unembed(ctx, x, cfg)
         return logits, {"k": new_lc["k"], "v": new_lc["v"], "enc": enc,
                         "pos": pos + 1}

@@ -20,11 +20,12 @@ from jax import lax
 
 from repro.parallel.sharding import constrain
 from repro.parallel.unroll import unroll_for
+from repro.policy import OpKind, plan_segments, site_scope
 
 from .common import ArchConfig
 from .layers import dense, norm, unembed, embed
 from .module import Ctx, apply_model, init_model
-from .transformer import scan_layers, stacked_init
+from .transformer import clip_segments, scan_policy_segments, stacked_init
 
 
 # ---------------------------------------------------------------------------
@@ -153,6 +154,18 @@ def xlstm_block(ctx: Ctx, cfg: ArchConfig, x, *, kind: str, state=None):
     return constrain(x, ("act_batch", "act_seq", "act_embed")), new_state
 
 
+_CELL_SITES = {
+    "mlstm": ("wq", "wk", "wv", "wgate", "wo"),
+    "slstm": ("wz", "wi", "wf", "wo_in", "w_down"),
+}
+
+
+def xlstm_block_sites(kinds, i: int):
+    kind = kinds[i]
+    return [(f"xlstm/layer_{i}/{kind}/{n}", OpKind.DENSE)
+            for n in _CELL_SITES[kind]]
+
+
 class XLSTMModel:
     """Blocks: 1 sLSTM per ``slstm_every`` blocks (xLSTM[7:1] for 1.3b),
     mLSTM otherwise. Two stacked scans keep HLO compact."""
@@ -164,6 +177,10 @@ class XLSTMModel:
                       for i in range(cfg.n_layers)]
         self.n_m = self.kinds.count("mlstm")
         self.n_s = self.kinds.count("slstm")
+        self.segments = plan_segments(
+            cfg.approx_policy,
+            functools.partial(xlstm_block_sites, self.kinds),
+            0, cfg.n_layers)
 
     def init(self, rng, *, abstract: bool = False):
         cfg = self.cfg
@@ -226,12 +243,16 @@ class XLSTMModel:
             n_m_here = min(group if self.n_s else cfg.n_layers,
                            self.n_m - mi)
             if n_m_here > 0:
-                sub = jax.tree.map(lambda p: p[mi:mi + n_m_here], mp)
-                subc = (None if states is None else jax.tree.map(
-                    lambda t: t[mi:mi + n_m_here], states["mlstm"]))
-                x, nc, _ = scan_layers(m_fn, sub, x, cache=subc,
-                                       remat=cfg.remat if states is None
-                                       else "none")
+                # mlstm stack rows [mi, mi+n) are global layers [i, i+n):
+                # policy segments are global, so slice relative to base
+                subc = (None if states is None else states["mlstm"])
+                with site_scope("xlstm"):
+                    x, nc, _ = scan_policy_segments(
+                        m_fn, mp, x,
+                        segments=clip_segments(self.segments, i,
+                                               i + n_m_here),
+                        base=i - mi, cache=subc,
+                        remat=cfg.remat if states is None else "none")
                 if nc is not None:
                     new_m_parts.append(nc)
                 mi += n_m_here
@@ -240,9 +261,10 @@ class XLSTMModel:
                 pslice = jax.tree.map(lambda p: p[si], sp)
                 st = (None if states is None else jax.tree.map(
                     lambda t: t[si], states["slstm"]))
-                x, nst = apply_model(
-                    lambda c, xx: xlstm_block(c, cfg, xx, kind="slstm",
-                                              state=st), pslice, x)
+                with site_scope("xlstm"), site_scope(f"layer_{i}"):
+                    x, nst = apply_model(
+                        lambda c, xx: xlstm_block(c, cfg, xx, kind="slstm",
+                                                  state=st), pslice, x)
                 new_s_parts.append(nst)
                 si += 1
                 i += 1
@@ -262,7 +284,9 @@ class XLSTMModel:
         x = embed(ctx, batch["tokens"], self.cfg)
         x, _ = self._run(params, x)
         x = norm(ctx, "final_ln", x, self.cfg)
-        return unembed(ctx, x, self.cfg), jnp.zeros((), jnp.float32)
+        with site_scope("xlstm"):
+            logits = unembed(ctx, x, self.cfg)
+        return logits, jnp.zeros((), jnp.float32)
 
     def init_cache(self, batch_size: int, max_seq: int, *,
                    abstract: bool = False):
@@ -295,6 +319,7 @@ class XLSTMModel:
         states = {k: v for k, v in cache.items() if k != "pos"}
         x, new_states = self._run(params, x, states=states)
         x = norm(ctx, "final_ln", x, self.cfg)
-        logits = unembed(ctx, x, self.cfg)
+        with site_scope("xlstm"):
+            logits = unembed(ctx, x, self.cfg)
         new_states["pos"] = cache["pos"] + 1
         return logits, new_states

@@ -18,11 +18,12 @@ from jax import lax
 
 from repro.parallel.sharding import constrain
 from repro.parallel.unroll import unroll_for
+from repro.policy import OpKind, plan_segments, site_scope
 
 from .common import ArchConfig
 from .layers import dense, embed, norm, self_attention, unembed, mlp
 from .module import Ctx, apply_model, ones_init, zeros_init
-from .transformer import scan_layers, stacked_init
+from .transformer import clip_segments, scan_policy_segments, stacked_init
 
 
 # ---------------------------------------------------------------------------
@@ -105,6 +106,12 @@ def mamba_block(ctx: Ctx, cfg: ArchConfig, x, *, state: Optional[dict] = None):
     return x, new_state
 
 
+def mamba_block_sites(i: int):
+    base = f"zamba/layer_{i}/mamba"
+    return [(f"{base}/{n}", OpKind.DENSE)
+            for n in ("in_proj", "bc_proj", "dt_proj", "out_proj")]
+
+
 def shared_attn_block(ctx: Ctx, cfg: ArchConfig, x, *, positions, cache=None):
     """The Zamba shared transformer block (params reused at every site)."""
     with ctx.scope("attn"):
@@ -121,6 +128,8 @@ class ZambaModel:
         self.cfg = cfg
         self.every = cfg.shared_attn_every
         self.n_sites = cfg.n_layers // self.every if self.every else 0
+        self.segments = plan_segments(
+            cfg.approx_policy, mamba_block_sites, 0, cfg.n_layers)
 
     def init(self, rng, *, abstract: bool = False):
         cfg = self.cfg
@@ -173,27 +182,37 @@ class ZambaModel:
         tokens = batch["tokens"]
         positions = jnp.arange(tokens.shape[1])
         ctx = Ctx("apply", params=params)
-        x = embed(ctx, tokens, cfg)
         fn = self._mamba_fn()
         mp = params["mamba_blocks"]
-        if not self.n_sites:
-            x, _, _ = scan_layers(fn, mp, x, remat=cfg.remat)
-        else:
-            for site in range(self.n_sites):
-                sub = jax.tree.map(
-                    lambda p: p[site * self.every:(site + 1) * self.every], mp)
-                x, _, _ = scan_layers(fn, sub, x, remat=cfg.remat)
-                x, _ = apply_model(
-                    lambda c, xx: shared_attn_block(c, cfg, xx,
-                                                    positions=positions),
-                    params["shared_attn"], x)
-            # tail blocks beyond the last shared-attn site (38 = 6x6 + 2)
-            tail0 = self.n_sites * self.every
-            if tail0 < cfg.n_layers:
-                sub = jax.tree.map(lambda t: t[tail0:], mp)
-                x, _, _ = scan_layers(fn, sub, x, remat=cfg.remat)
-        x = norm(ctx, "final_ln", x, cfg)
-        return unembed(ctx, x, cfg), jnp.zeros((), jnp.float32)
+        with site_scope("zamba"):
+            x = embed(ctx, tokens, cfg)
+            if not self.n_sites:
+                x, _, _ = scan_policy_segments(fn, mp, x,
+                                               segments=self.segments,
+                                               remat=cfg.remat)
+            else:
+                for site in range(self.n_sites):
+                    lo, hi = site * self.every, (site + 1) * self.every
+                    x, _, _ = scan_policy_segments(
+                        fn, mp, x,
+                        segments=clip_segments(self.segments, lo, hi),
+                        remat=cfg.remat)
+                    with site_scope(f"shared_{site}"):
+                        x, _ = apply_model(
+                            lambda c, xx: shared_attn_block(
+                                c, cfg, xx, positions=positions),
+                            params["shared_attn"], x)
+                # tail blocks beyond the last shared-attn site (38 = 6x6 + 2)
+                tail0 = self.n_sites * self.every
+                if tail0 < cfg.n_layers:
+                    x, _, _ = scan_policy_segments(
+                        fn, mp, x,
+                        segments=clip_segments(self.segments, tail0,
+                                               cfg.n_layers),
+                        remat=cfg.remat)
+            x = norm(ctx, "final_ln", x, cfg)
+            logits = unembed(ctx, x, cfg)
+        return logits, jnp.zeros((), jnp.float32)
 
     def init_cache(self, batch_size: int, max_seq: int, *,
                    abstract: bool = False):
@@ -230,40 +249,47 @@ class ZambaModel:
         pos = cache["pos"]
         positions = jnp.reshape(pos, (1,))
         ctx = Ctx("apply", params=params)
-        x = embed(ctx, tokens, cfg)
         fn = self._mamba_fn()
         mp = params["mamba_blocks"]
         mamba_state = {"conv": cache["conv"], "ssm": cache["ssm"]}
         new_cache = dict(cache)
-        if not self.n_sites:
-            x, ns, _ = scan_layers(fn, mp, x, cache=mamba_state)
-            new_cache.update(ns)
-        else:
-            parts = []
-            for site in range(self.n_sites):
-                lo, hi = site * self.every, (site + 1) * self.every
-                sub = jax.tree.map(lambda t: t[lo:hi], mp)
-                subc = jax.tree.map(lambda t: t[lo:hi], mamba_state)
-                x, ns, _ = scan_layers(fn, sub, x, cache=subc)
-                parts.append(ns)
-                ac = dict(cache[f"attn_{site}"], pos=pos)
-                x, nac = apply_model(
-                    lambda c, xx: shared_attn_block(c, cfg, xx,
-                                                    positions=positions,
-                                                    cache=ac),
-                    params["shared_attn"], x)
-                nac.pop("pos")
-                new_cache[f"attn_{site}"] = nac
-            # tail blocks (38 = 6x6 + 2)
-            tail0 = self.n_sites * self.every
-            if tail0 < cfg.n_layers:
-                sub = jax.tree.map(lambda t: t[tail0:], mp)
-                subc = jax.tree.map(lambda t: t[tail0:], mamba_state)
-                x, ns, _ = scan_layers(fn, sub, x, cache=subc)
-                parts.append(ns)
-            merged = jax.tree.map(lambda *t: jnp.concatenate(t, 0), *parts)
-            new_cache.update(merged)
-        x = norm(ctx, "final_ln", x, cfg)
-        logits = unembed(ctx, x, cfg)
+        with site_scope("zamba"):
+            x = embed(ctx, tokens, cfg)
+            if not self.n_sites:
+                x, ns, _ = scan_policy_segments(fn, mp, x,
+                                                segments=self.segments,
+                                                cache=mamba_state)
+                new_cache.update(ns)
+            else:
+                parts = []
+                for site in range(self.n_sites):
+                    lo, hi = site * self.every, (site + 1) * self.every
+                    x, ns, _ = scan_policy_segments(
+                        fn, mp, x,
+                        segments=clip_segments(self.segments, lo, hi),
+                        cache=mamba_state)
+                    parts.append(ns)
+                    ac = dict(cache[f"attn_{site}"], pos=pos)
+                    with site_scope(f"shared_{site}"):
+                        x, nac = apply_model(
+                            lambda c, xx: shared_attn_block(
+                                c, cfg, xx, positions=positions, cache=ac),
+                            params["shared_attn"], x)
+                    nac.pop("pos")
+                    new_cache[f"attn_{site}"] = nac
+                # tail blocks (38 = 6x6 + 2)
+                tail0 = self.n_sites * self.every
+                if tail0 < cfg.n_layers:
+                    x, ns, _ = scan_policy_segments(
+                        fn, mp, x,
+                        segments=clip_segments(self.segments, tail0,
+                                               cfg.n_layers),
+                        cache=mamba_state)
+                    parts.append(ns)
+                merged = jax.tree.map(lambda *t: jnp.concatenate(t, 0),
+                                      *parts)
+                new_cache.update(merged)
+            x = norm(ctx, "final_ln", x, cfg)
+            logits = unembed(ctx, x, cfg)
         new_cache["pos"] = pos + 1
         return logits, new_cache

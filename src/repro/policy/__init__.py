@@ -1,0 +1,69 @@
+"""Per-site approximation policies for DAISM numerics.
+
+Instead of threading one global ``DaismConfig`` through every layer, models
+name each contraction they perform (an *op-site*, e.g.
+``decoder/layer_3/attn/wq``) and resolve its numerics through an injectable
+:class:`ApproxPolicy` — an ordered list of glob rules mapping sites to
+:class:`~repro.core.config.DaismConfig` values. Different layers (or op
+kinds) can therefore run different multiplier variants in one forward pass,
+which is the paper's energy/accuracy trade-off made addressable.
+
+Quick start::
+
+    from repro import policy as P
+
+    # attention exact, first/last layer exact, middle layers PC3_tr:
+    pol = P.parse_policy("*/attn/*=exact,*/layer_0/*=exact,"
+                         "*/layer_21/*=exact,*=pc3_tr")
+    cfg = dataclasses.replace(get_config("tinyllama_1_1b"), policy=pol)
+    model = build_model(cfg)           # consumes the policy internally
+    logits, _ = model.forward(params, batch)
+    print(P.site_report(pol))          # per-site resolution + energy table
+
+Public API
+----------
+
+``ApproxPolicy``
+    Frozen, hashable rule list (jit-static). Constructors:
+    ``uniform``, ``first_last_exact``, ``attention_exact``,
+    ``depth_schedule``.
+``Rule``
+    One ``pattern -> DaismConfig`` entry; ``@kind`` patterns match the
+    :class:`OpKind` instead of the path.
+``parse_policy(spec)`` / ``parse_config(spec)``
+    CLI mini-language: ``"*/attn/*=exact,*=pc3_tr:jnp"``.
+``OpKind`` / ``site_scope`` / ``current_path``
+    The op-site abstraction (see :mod:`repro.policy.sites`).
+``make_dot(policy)`` / ``policy_dot`` / ``policy_conv2d`` /
+``policy_expert_matmul``
+    Injection points: ``dot_general``-style callables models consume.
+``resolve_site`` / ``validate_for_dtype`` / ``auto_interpret``
+    The backend dispatcher (dtype validation at resolve time).
+``site_report`` / ``resolution_log`` / ``estimated_energy_uj`` /
+``kernel_stats`` / ``clear_log``
+    Trace-time resolution reporting and kernel-cache introspection.
+``plan_segments(policy, sites_fn, lo, hi)``
+    Split a layer range into maximal runs of identical resolved configs so
+    scanned layer stacks stay O(1) in HLO while honoring per-depth rules.
+"""
+from __future__ import annotations
+
+from .dispatch import (auto_interpret, clear_log, estimated_energy_uj,
+                       kernel_stats, make_dot, matmul_kernel, policy_conv2d,
+                       policy_dot, policy_expert_matmul, resolution_log,
+                       resolve_site, site_report, validate_for_dtype)
+from .policy import (EXACT, ApproxPolicy, Rule, describe_config,
+                     layer_signature, parse_config, parse_policy,
+                     plan_segments)
+from .sites import OpKind, current_path, current_prefix, site_scope
+
+__all__ = [
+    "ApproxPolicy", "Rule", "OpKind", "EXACT",
+    "parse_policy", "parse_config", "describe_config",
+    "site_scope", "current_path", "current_prefix",
+    "make_dot", "policy_dot", "policy_conv2d", "policy_expert_matmul",
+    "resolve_site", "validate_for_dtype", "auto_interpret",
+    "site_report", "resolution_log", "estimated_energy_uj",
+    "kernel_stats", "clear_log", "matmul_kernel",
+    "plan_segments", "layer_signature",
+]

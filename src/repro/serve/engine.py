@@ -174,6 +174,16 @@ class ServeEngine:
         self._step_times: List[float] = []
         self._prefill_s = 0.0
 
+    # -- numerics policy ---------------------------------------------------
+
+    def resolution_report(self) -> str:
+        """Per-site approximation resolution of the served model (sites
+        appear once their prefill/decode traces have run; see
+        repro.policy.site_report)."""
+        from repro.policy import site_report
+
+        return site_report(self.model.cfg.approx_policy)
+
     # -- request intake ----------------------------------------------------
 
     def submit(self, request: Request) -> RequestState:
