@@ -1,8 +1,11 @@
 """Benchmark harness: one module per paper table/figure (DESIGN.md section 6).
 
 Prints ``name,us_per_call,derived`` CSV rows plus per-benchmark claim
-checks, and writes results/benchmarks.json. The dry-run/roofline tables
-(EXPERIMENTS.md Dry-run/Roofline) come from ``repro.launch.dryrun``,
+checks. Each suite's rows + claims are written to ``BENCH_<name>.json`` at
+the repo root (``serve_bench`` -> ``BENCH_serve.json``) — small checked-in
+artifacts a reviewer can diff without rerunning the suite — and the
+combined results go to results/benchmarks.json. The dry-run/roofline
+tables (EXPERIMENTS.md Dry-run/Roofline) come from ``repro.launch.dryrun``,
 which needs the 512-device environment and is run separately.
 """
 from __future__ import annotations
@@ -14,6 +17,13 @@ import time
 
 _MODULES = ("error_distance", "energy", "arch_cycles", "gemm_bench",
             "accuracy", "policy_sweep", "serve_bench")
+
+_REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def _artifact_path(name: str) -> str:
+    short = name[:-len("_bench")] if name.endswith("_bench") else name
+    return os.path.join(_REPO_ROOT, f"BENCH_{short}.json")
 
 
 def main() -> None:
@@ -32,6 +42,11 @@ def main() -> None:
                   flush=True)
         for k, v in claims.items():
             print(f"claim,{name}.{k},{v}", flush=True)
+        with open(_artifact_path(name), "w") as f:
+            json.dump({"suite": name, "elapsed_s": round(dt, 1),
+                       "rows": rows, "claims": claims}, f, indent=1,
+                      default=str)
+            f.write("\n")
         all_rows += rows
         all_claims.update({f"{name}.{k}": v for k, v in claims.items()})
     os.makedirs("results", exist_ok=True)

@@ -1,18 +1,20 @@
-"""Serving launcher: thin CLI over the continuous-batching engine.
+"""Serving launcher: thin CLI over the paged continuous-batching engine.
 
     PYTHONPATH=src python -m repro.launch.serve --arch tinyllama_1_1b --smoke
 
-Builds the model, submits a synthetic mixed-length workload, and drives
-repro.serve.ServeEngine: batched prefill into a slot KV pool, one jit'd
-decode step across all slots per token, finished sequences retire and
-waiting requests join the running batch mid-stream. Prints the per-request
-timeline and the engine's latency/throughput report.
+Builds the model, submits a synthetic workload (fixed stagger or Poisson
+arrivals), and drives repro.serve.ServeEngine: a paged KV pool (block
+tables + prefix caching), chunked prefill interleaved with decode, and one
+jit'd step per approximation-policy group. Prints the per-request timeline
+and the engine's latency/throughput/KV-utilization report.
 
-``--policy "*/attn/*=exact,*=pc3_tr"`` serves with per-site DAISM numerics
-(repro.policy); the legacy ``--variant pc3_tr`` flag still works through the
-uniform-policy deprecation shim. After the run the per-site resolution
-report (variant + estimated multiply energy per site) is printed. See
-benchmarks/serve_bench.py and benchmarks/policy_sweep.py for numbers.
+``--policy "*/attn/*=exact,*=pc3_tr"`` serves the whole engine with one
+per-site policy; ``--tiers "free=*=pc3_tr;paid=*/attn/*=exact"`` registers
+named per-request tiers and spreads the workload across them (mixed-tier
+traffic batches per resolved policy — no cross-tier recompiles). The legacy
+``--variant pc3_tr`` flag still works through the uniform-policy
+deprecation shim. After the run the per-group site resolution report is
+printed. See benchmarks/serve_bench.py for numbers.
 """
 import argparse
 import dataclasses
@@ -32,19 +34,35 @@ def main(argv=None):
                    help="reduced config + small workload (CPU-friendly)")
     p.add_argument("--requests", type=int, default=6)
     p.add_argument("--slots", type=int, default=2,
-                   help="decode batch width / KV pool rows")
+                   help="decode batch width per policy group")
     p.add_argument("--max-seq", type=int, default=64,
-                   help="per-slot KV capacity")
+                   help="per-request KV capacity (prompt + generation)")
+    p.add_argument("--block-size", type=int, default=16,
+                   help="KV page size in tokens (= --max-seq reproduces "
+                        "the old slot pool)")
+    p.add_argument("--blocks", type=int, default=0,
+                   help="physical KV pages (0 = slots*max_seq/block_size, "
+                        "the old slot pool's memory)")
+    p.add_argument("--prefill-chunk", type=int, default=16,
+                   help="prompt tokens ingested per engine tick "
+                        "(chunked prefill; power of two)")
     p.add_argument("--prompt-len", type=int, default=8,
                    help="base prompt length (workload staggers around it)")
     p.add_argument("--gen", type=int, default=8,
                    help="base generation length")
     p.add_argument("--arrival-every", type=int, default=0,
                    help="space arrivals N engine steps apart (0 = all at once)")
+    p.add_argument("--poisson", type=float, default=0.0,
+                   help="Poisson arrival rate in requests/step (overrides "
+                        "--arrival-every; 0 = disabled)")
     p.add_argument("--policy", default="",
-                   help="per-site approximation policy spec, e.g. "
-                        "'*/attn/*=exact,*/layer_0/*=exact,*=pc3_tr' "
+                   help="engine-wide per-site approximation policy spec, "
+                        "e.g. '*/attn/*=exact,*/layer_0/*=exact,*=pc3_tr' "
                         "(repro.policy mini-language)")
+    p.add_argument("--tiers", default="",
+                   help="named per-request policy tiers, e.g. "
+                        "'free=*=pc3_tr;paid=*/attn/*=exact' — the workload "
+                        "is spread across them (mixed-tier serving)")
     p.add_argument("--variant", default="exact",
                    help="DEPRECATED (use --policy): uniform multiplier "
                         "variant (exact | fla | ... | pc3_tr)")
@@ -62,11 +80,12 @@ def main(argv=None):
 
     from repro.configs import get_config
     from repro.models.registry import build_model
-    from repro.serve import EngineConfig, ServeEngine, synthetic_requests
+    from repro.serve import (EngineConfig, ServeEngine, parse_tiers,
+                             poisson_requests, synthetic_requests)
 
     cfg = get_config(args.arch)
     if args.smoke:
-        cfg = cfg.smoke(window=0)  # slot pools need non-ring caches
+        cfg = cfg.smoke(window=0)  # paged pools need non-ring caches
     if args.policy:
         cfg = cfg.with_policy(args.policy)
     elif args.variant != "exact":
@@ -78,36 +97,56 @@ def main(argv=None):
     model = build_model(cfg)
     params, _ = model.init(jax.random.PRNGKey(0))
 
+    tiers = parse_tiers(args.tiers) if args.tiers else ()
     engine = ServeEngine(model, params, EngineConfig(
-        num_slots=args.slots, max_seq=args.max_seq))
-    requests = synthetic_requests(
-        args.requests, cfg.vocab, base_prompt=args.prompt_len,
-        base_gen=args.gen, seed=args.seed, arrival_every=args.arrival_every)
+        num_slots=args.slots, max_seq=args.max_seq,
+        block_size=args.block_size, num_blocks=args.blocks,
+        prefill_chunk=args.prefill_chunk, tiers=tiers))
+    tier_names = [name for name, _ in tiers]
+    if args.poisson > 0:
+        requests = poisson_requests(
+            args.requests, cfg.vocab, rate=args.poisson,
+            base_prompt=args.prompt_len, base_gen=args.gen, seed=args.seed,
+            tiers=tier_names)
+    else:
+        requests = synthetic_requests(
+            args.requests, cfg.vocab, base_prompt=args.prompt_len,
+            base_gen=args.gen, seed=args.seed,
+            arrival_every=args.arrival_every, tiers=tier_names)
     report = engine.run(requests)
 
-    numerics = f"policy {args.policy}" if args.policy else args.variant
-    print(f"== {args.arch} ({numerics}) — {args.requests} requests over "
-          f"{args.slots} slots ==")
+    numerics = (f"tiers {args.tiers}" if args.tiers
+                else f"policy {args.policy}" if args.policy else args.variant)
+    arrivals = (f"poisson rate {args.poisson}" if args.poisson > 0
+                else f"every {args.arrival_every}" if args.arrival_every
+                else "all at once")
+    print(f"== {args.arch} ({numerics}) — {args.requests} requests, "
+          f"{args.slots} rows/group, {engine.cfg.blocks} x "
+          f"{args.block_size}-token KV pages, arrivals {arrivals} ==")
     for ev in report.events:
         if ev["event"] == "admit":
             joined = " (joined running batch)" if ev["joined_running"] else ""
+            cached = (f", {ev['cached_blocks']} cached"
+                      if ev.get("cached_blocks") else "")
             print(f"step {ev['step']:4d}  admit  req {ev['request_id']} "
-                  f"-> slot {ev['slot']}{joined}")
+                  f"-> {ev['group']}/row {ev['slot']} "
+                  f"[{ev['blocks']} pages{cached}]{joined}")
         else:
             print(f"step {ev['step']:4d}  retire req {ev['request_id']} "
-                  f"(slot {ev['slot']} freed, {ev['reason']})")
+                  f"({ev['group']}/row {ev['slot']} freed, {ev['reason']})")
     print(report.summary())
-    if args.policy or args.variant != "exact":
+    if args.tiers or args.policy or args.variant != "exact":
         print(engine.resolution_report())
     if report.completed:
         sample = report.completed[0]
         print(f"sample (req {sample.request_id}): {sample.output}")
     default_workload = all(
         getattr(args, k) == p.get_default(k)
-        for k in ("requests", "slots", "gen", "prompt_len", "arrival_every"))
+        for k in ("requests", "slots", "gen", "prompt_len", "arrival_every",
+                  "poisson", "block_size", "blocks", "prefill_chunk"))
     if args.smoke and default_workload:
         # the gate is calibrated to the default smoke workload (staggered
-        # lengths oversubscribing 2 slots); custom shapes — one slot, spaced
+        # lengths oversubscribing 2 rows); custom shapes — one row, spaced
         # arrivals, equal-length retire waves — may legitimately never join
         if report.joined_mid_stream < 2:  # explicit: survives python -O
             raise SystemExit(
@@ -115,6 +154,13 @@ def main(argv=None):
                 f"(got {report.joined_mid_stream} mid-stream joins)")
         print("SMOKE-OK: continuous batching exercised "
               f"({report.joined_mid_stream} mid-stream joins)")
+    if args.smoke and args.tiers and report.policy_groups < 2:
+        raise SystemExit(
+            "smoke --tiers workload must exercise >= 2 policy groups "
+            f"(got {report.policy_groups})")
+    if args.smoke and args.tiers:
+        print(f"SMOKE-OK: {report.policy_groups} policy groups served "
+              "mixed-tier traffic")
 
 
 if __name__ == "__main__":

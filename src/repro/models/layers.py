@@ -224,6 +224,34 @@ def self_attention(ctx: Ctx, x: jnp.ndarray, cfg: ArchConfig, *,
     q = constrain(q, ("act_batch", "act_seq", "act_heads", None))
 
     new_cache = None
+    if cache is not None and "write_idx" in cache:
+        # paged KV cache (repro.serve): per-layer physical page pool
+        # k/v (P, KH, HD) where P = num_blocks * block_size; the request's
+        # block table is pre-resolved by DecoderLM.paged_step into
+        #   write_idx (B, S): physical cell of each new token (>= P: drop —
+        #     padding rows / chunk padding beyond the reservation), and
+        #   phys_read (B, K): physical cell of every *logical* kv position
+        #     0..K-1 (clipped gather; unmapped entries land beyond the
+        #     row's write position, so the causal mask excludes them).
+        ck, cv = cache["k"], cache["v"]
+        p_cells = ck.shape[0]
+        widx = cache["write_idx"]
+        ck = ck.at[widx].set(k.astype(ck.dtype), mode="drop")
+        cv = cv.at[widx].set(v.astype(cv.dtype), mode="drop")
+        ck = constrain(ck, ("cache_seq", "act_kv_heads", None))
+        cv = constrain(cv, ("cache_seq", "act_kv_heads", None))
+        idx = jnp.minimum(cache["phys_read"], p_cells - 1)
+        gk = jnp.take(ck, idx, axis=0)  # (B, K, KH, HD)
+        gv = jnp.take(cv, idx, axis=0)
+        kv_pos = jnp.arange(gk.shape[1])
+        out = attend(q, gk, gv, positions, kv_pos, causal=causal,
+                     window=cfg.window, chunk=cfg.attn_chunk,
+                     softcap=cfg.logit_softcap,
+                     unroll_category=unroll_category)
+        out = out.reshape(b, s, nh * hd)
+        out = dense(ctx, "wo", out, x.shape[-1], cfg, axes=("heads", "embed"),
+                    use_bias=use_bias)
+        return out, dict(k=ck, v=cv)
     if cache is not None:
         ck, cv, pos = cache["k"], cache["v"], cache["pos"]
         size = ck.shape[1]

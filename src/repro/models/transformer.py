@@ -322,6 +322,81 @@ class DecoderLM:
             cache["abs_pos"] = mk((cfg.n_layers, size), jnp.int32, fill=-1)
         return cache
 
+    # -- paged KV cache (block tables; repro.serve) -------------------------
+    def init_paged_cache(self, num_blocks: int, block_size: int, *,
+                         abstract: bool = False):
+        """Physical page pool: ``k/v (layers, num_blocks*block_size, KH, HD)``.
+
+        Logical sequences live in ``repro.serve.kv_pool`` block tables; the
+        pool itself has no batch dimension — concurrency is bounded by pages,
+        not rows. Windowed (ring-buffer) models are not supported: a paged
+        pool never rolls, it frees whole pages at retirement.
+        """
+        cfg = self.cfg
+        if cfg.window:
+            raise ValueError(
+                f"paged KV cache needs window=0 (got window={cfg.window}: "
+                "ring buffers roll in place, pages are freed whole)")
+        if self.is_vlm:
+            raise NotImplementedError(
+                "paged serving does not cover VLM cross-attention blocks")
+        cells = num_blocks * block_size
+        kshape = (cfg.n_layers, cells, cfg.kv_heads, cfg.head_dim)
+        dt = jnp.dtype(cfg.compute_dtype)
+        if abstract:
+            return {"k": jax.ShapeDtypeStruct(kshape, dt),
+                    "v": jax.ShapeDtypeStruct(kshape, dt)}
+        return {"k": jnp.zeros(kshape, dt), "v": jnp.zeros(kshape, dt)}
+
+    def paged_step(self, params: Params, tokens: jnp.ndarray, cache, *,
+                   block_size: int):
+        """One fixed-shape step over block tables — decode (S=1) and chunked
+        prefill (S=chunk) are the same trace family.
+
+        tokens (B, S); cache holds the physical pools ``k/v`` from
+        :meth:`init_paged_cache` plus per-call row metadata: ``block_tables``
+        (B, MB) int32 page ids (-1 = unmapped) and ``pos`` (B,) — the row's
+        write offset (its current logical length). Row ``i`` writes K/V for
+        positions ``pos[i] .. pos[i]+S-1`` through its table and attends over
+        its own gathered pages; writes that fall outside the mapped pages
+        (padding rows, chunk padding past the reservation) are dropped, and
+        unmapped reads are causally masked. Returns ``(logits (B, S, V),
+        new {k, v})`` — the caller owns ``block_tables``/``pos``.
+        """
+        cfg = self.cfg
+        bt, pos = cache["block_tables"], cache["pos"]
+        b, s = tokens.shape
+        mb = bt.shape[1]
+        cells = cache["k"].shape[1]
+        positions = pos[:, None] + jnp.arange(s)  # (B, S) absolute
+        # physical cell of every logical kv position (B, MB*block_size)
+        base = jnp.where(bt < 0, cells, bt * block_size)
+        phys_read = (base[:, :, None] + jnp.arange(block_size)
+                     ).reshape(b, mb * block_size)
+        # physical cell of each written token; >= cells means "drop"
+        lblk = positions // block_size
+        wblk = jnp.take_along_axis(bt, jnp.minimum(lblk, mb - 1), axis=1)
+        write_idx = jnp.where(
+            (wblk < 0) | (lblk >= mb), cells,
+            wblk * block_size + positions % block_size)
+
+        ctx = Ctx("apply", params=params)
+        layer_cache = {"k": cache["k"], "v": cache["v"]}
+
+        def layer_fn(c, xx, cache=None):
+            lc = dict(cache, write_idx=write_idx, phys_read=phys_read)
+            return decoder_block(c, cfg, xx, positions=positions,
+                                 cache=lc, causal=True)
+
+        with site_scope("decoder"):
+            x = embed(ctx, tokens, cfg)
+            x, new_lc, _ = scan_policy_segments(
+                layer_fn, params["blocks"], x, segments=self.segments,
+                cache=layer_cache)
+            x = norm(ctx, "final_ln", x, cfg)
+            logits = unembed(ctx, x, cfg)
+        return logits, new_lc
+
     # -- cached forward (shared by decode_step / prefill) -------------------
     def _cached_forward(self, params: Params, tokens: jnp.ndarray, cache,
                         positions, pos,

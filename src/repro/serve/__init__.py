@@ -1,8 +1,11 @@
-"""Production serving subsystem: continuous batching over a slot-based
-KV-cache pool (see DESIGN notes in engine.py)."""
-from .engine import EngineConfig, ServeEngine, ServeReport
+"""Production serving subsystem: continuous batching over a paged
+(block-table) KV cache with per-request approximation-policy tiers — see
+the DESIGN notes in engine.py and the allocator in kv_pool.py."""
+from .engine import EngineConfig, ServeEngine, ServeReport, parse_tiers
+from .kv_pool import BlockPool, blocks_needed
 from .scheduler import Request, RequestState, Scheduler
-from .workload import synthetic_requests
+from .workload import poisson_requests, synthetic_requests
 
-__all__ = ["EngineConfig", "Request", "RequestState", "Scheduler",
-           "ServeEngine", "ServeReport", "synthetic_requests"]
+__all__ = ["BlockPool", "EngineConfig", "Request", "RequestState",
+           "Scheduler", "ServeEngine", "ServeReport", "blocks_needed",
+           "parse_tiers", "poisson_requests", "synthetic_requests"]

@@ -1,64 +1,148 @@
-"""Synchronous continuous-batching serving engine over a slot KV pool.
+"""Synchronous continuous-batching engine over a paged KV cache with
+per-request approximation-policy tiers.
 
-Design (the scaffolding every later scaling PR builds on):
+Design (replaces the PR 1 fixed-slot pool):
 
-* **Slot pool** — one fixed-capacity cache allocation for the whole engine:
-  ``k/v: (layers, num_slots, max_seq, kv_heads, head_dim)`` plus a per-slot
-  length vector ``pos: (num_slots,)``. Row ``i`` is an independent request
-  at its own offset; the model's per-slot decode path (``cache['pos']`` as
-  a vector) masks and writes each row at its own position.
-* **Prefill / decode separation** — one jit'd batched prefill ingests whole
-  prompts (padded to a shape bucket, so compiles are O(log^2) in practice)
-  and yields the first generated token; one jit'd decode step is reused for
-  every subsequent token across all slots. Prompt K/V is adopted into the
-  pool by a jit'd scatter ("insert") that reads/writes cache rows by slot
-  index; out-of-range slot ids (padding rows of the prefill bucket) are
-  dropped by the scatter.
-* **Donated buffers** — decode and insert donate the pool, so XLA updates
-  the cache in place instead of allocating a second pool per token (skipped
-  on CPU, where jax does not implement donation and would warn).
-* **Continuous batching** — between decode steps the scheduler retires
-  finished rows and admits waiting requests into the freed slots
-  (scheduler.py); decode always runs the full fixed-shape batch, so no
-  recompiles happen at admission/retirement boundaries.
-* **Accounting** — per-request TTFT / latency and engine-level
-  tokens/sec + step-latency percentiles (ServeReport), with the runtime
-  straggler watchdog counting anomalously slow decode steps.
+* **Paged KV pool** — one physical page pool for the whole engine:
+  ``k/v: (layers, num_blocks * block_size, kv_heads, head_dim)`` with no
+  batch dimension. A request owns a *block table* (kv_pool.BlockPool):
+  ``ceil((prompt + gen - 1) / block_size)`` pages reserved at admission, so
+  short requests no longer pay for ``max_seq`` cells and concurrency is
+  bounded by pages, not preallocated rows. Full prompt blocks are
+  ref-counted and content-addressed: identical prompt prefixes under the
+  same policy share pages (prefix caching) and skip recompute. The old slot
+  pool is the degenerate ``block_size == max_seq`` configuration.
+* **One jit'd step, block tables inside** — ``DecoderLM.paged_step``
+  resolves block tables to gather/scatter indices *inside* the jit'd step:
+  decode (S=1) and chunked prefill (S=prefill_chunk) are two fixed shapes of
+  the same function, so admission/retirement and table growth never
+  recompile.
+* **Chunked prefill** — prompts are ingested ``prefill_chunk`` tokens per
+  tick, interleaved with decode steps, so a long prompt no longer stalls
+  every running stream for its whole prefill; the chunk that reaches the
+  prompt's last token yields the first generated token (TTFT).
+* **Policy groups** — each request carries an approximation policy (tier
+  name from ``EngineConfig.tiers``, a raw spec, an ``ApproxPolicy``, or
+  None = the base model's). Requests are batched *by resolved policy*: one
+  scheduler + one jit'd step per group (the policy is jit-static, PR 2), so
+  mixed free/paid traffic shares steps within a tier and never causes
+  cross-tier recompiles. All groups share the physical page pool and the
+  model params.
+* **Donated buffers** — each group's step donates the pool, which is
+  threaded sequentially through the groups' calls within a tick (in-place
+  updates; skipped on CPU where jax does not implement donation).
+* **Accounting** — per-request TTFT / latency, engine tok/s + step
+  percentiles, KV memory utilization (live tokens / pool cells) sampled
+  every tick, peak concurrency, and prefix-cache hits (ServeReport).
 
-Greedy (argmax) sampling: deterministic, so batched decode is
+Greedy (argmax) sampling: deterministic, so paged batched decode is
 token-identical to the single-request ``decode_step`` path — asserted in
-tests/test_serve.py.
+tests/test_serve.py, including under mixed per-request policies.
 """
 from __future__ import annotations
 
 import dataclasses
 import time
-from typing import Any, Dict, List, Optional, Sequence
+from typing import Any, Dict, List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.bitops import round_up as _round_up
+from repro.policy import ApproxPolicy, parse_policy
 from repro.runtime.watchdog import StepWatchdog
 
+from .kv_pool import SENTINEL, BlockPool
 from .scheduler import Request, RequestState, Scheduler
-
-
-def _next_pow2(n: int) -> int:
-    return 1 << max(n - 1, 0).bit_length()
 
 
 def _pct(xs: Sequence[float], q: float) -> float:
     return float(np.percentile(np.asarray(xs), q)) if len(xs) else 0.0
 
 
+def parse_tiers(spec: str) -> Tuple[Tuple[str, str], ...]:
+    """``"free=*=pc3_tr;paid=*/attn/*=exact"`` -> (("free", "*=pc3_tr"), ...).
+
+    Tiers are ';'-separated ``name=policy-spec`` entries (the spec itself
+    contains '=' and ',', so only the first '=' splits)."""
+    tiers = []
+    for item in spec.split(";"):
+        item = item.strip()
+        if not item:
+            continue
+        name, sep, policy = item.partition("=")
+        if not sep or not name.strip() or not policy.strip():
+            raise ValueError(
+                f"bad tier entry {item!r}: expected name=policy-spec "
+                "(e.g. 'free=*=pc3_tr')")
+        tiers.append((name.strip(), policy.strip()))
+    return tuple(tiers)
+
+
 @dataclasses.dataclass(frozen=True)
 class EngineConfig:
-    num_slots: int = 4        # decode batch width == cache pool rows
-    max_seq: int = 128        # per-slot KV capacity (prompt + generation)
-    prefill_bucket: int = 16  # prompt lengths padded up to a multiple
-    eos_id: Optional[int] = None  # default EOS for requests without one
+    """Paged-serving engine configuration.
+
+    ``num_slots`` is the decode-batch width of each policy group (rows of
+    its fixed-shape step), decoupled from KV memory: ``num_blocks`` pages of
+    ``block_size`` cells bound how many tokens of K/V exist at once.
+    ``num_blocks=0`` sizes the pool to ``num_slots * max_seq / block_size``
+    — the memory of the old slot pool. ``tiers`` registers named policy
+    specs requests can reference (``Request.policy="free"``); see
+    :func:`parse_tiers` for the CLI string form.
+    """
+
+    num_slots: int = 4          # decode rows per policy group
+    max_seq: int = 128          # per-request KV capacity (prompt + gen)
+    block_size: int = 16        # KV page size (tokens); max_seq = old slots
+    num_blocks: int = 0         # physical pages; 0 = slot-pool-equivalent
+    prefill_chunk: int = 16     # prompt tokens ingested per engine tick
+    eos_id: Optional[int] = None    # default EOS for requests without one
+    tiers: Tuple[Tuple[str, str], ...] = ()  # (name, policy spec) pairs
+
+    def __post_init__(self) -> None:
+        # fail at construction with the field named, not as a shape error
+        # three layers deep in a jit trace
+        for field in ("num_slots", "max_seq", "block_size", "prefill_chunk"):
+            v = getattr(self, field)
+            if not isinstance(v, int) or v < 1:
+                raise ValueError(
+                    f"EngineConfig.{field} must be a positive int "
+                    f"(got {v!r})")
+        if self.num_blocks < 0:
+            raise ValueError(
+                f"EngineConfig.num_blocks must be >= 0 "
+                f"(0 = auto; got {self.num_blocks})")
+        if self.max_seq % self.block_size:
+            raise ValueError(
+                f"EngineConfig.max_seq ({self.max_seq}) must be a multiple "
+                f"of block_size ({self.block_size}): block tables map whole "
+                "pages")
+        if self.prefill_chunk > self.max_seq:
+            raise ValueError(
+                f"EngineConfig.prefill_chunk ({self.prefill_chunk}) must be "
+                f"<= max_seq ({self.max_seq})")
+        if self.prefill_chunk & (self.prefill_chunk - 1):
+            raise ValueError(
+                f"EngineConfig.prefill_chunk ({self.prefill_chunk}) must be "
+                "a power of two (one compiled prefill shape)")
+        if isinstance(self.tiers, dict):  # ergonomics: accept a dict
+            object.__setattr__(self, "tiers", tuple(self.tiers.items()))
+        for name, spec in self.tiers:
+            if not isinstance(name, str) or not isinstance(spec, str):
+                raise ValueError(
+                    f"EngineConfig.tiers entries must be (name, spec) "
+                    f"string pairs (got {(name, spec)!r})")
+
+    @property
+    def blocks(self) -> int:
+        """Physical pool pages (resolves the ``num_blocks=0`` default)."""
+        return self.num_blocks or self.num_slots * (self.max_seq
+                                                    // self.block_size)
+
+    @property
+    def max_blocks_per_seq(self) -> int:
+        return self.max_seq // self.block_size
 
 
 @dataclasses.dataclass
@@ -86,6 +170,12 @@ class ServeReport:
     step_p99_ms: float
     joined_mid_stream: int
     straggler_steps: int
+    # paged-KV accounting
+    kv_util_mean: float        # live tokens / pool cells, mean over ticks
+    kv_util_peak: float
+    peak_active_requests: int  # max concurrent admitted requests
+    prefix_hits: int           # prompt blocks adopted from the prefix cache
+    policy_groups: int         # distinct resolved policies served
     events: List[Dict[str, Any]]
 
     def summary(self) -> str:
@@ -100,91 +190,136 @@ class ServeReport:
             f"TTFT p50 {self.ttft_p50_ms:.1f} / p99 {self.ttft_p99_ms:.1f} "
             f"ms;  request latency p50 {self.latency_p50_ms:.1f} / p99 "
             f"{self.latency_p99_ms:.1f} ms",
+            f"KV util mean {self.kv_util_mean * 100:.1f}% / peak "
+            f"{self.kv_util_peak * 100:.1f}%;  peak concurrency "
+            f"{self.peak_active_requests};  {self.prefix_hits} prefix-cache "
+            f"block hit(s);  {self.policy_groups} policy group(s)",
             f"{self.joined_mid_stream} request(s) joined the running batch "
             f"mid-stream (continuous batching)",
         ]
         return "\n".join(lines)
 
 
+class _PolicyGroup:
+    """One resolved approximation policy: a model rebound to that policy,
+    a scheduler over ``num_slots`` decode rows, one jit'd paged step (two
+    compiled shapes: decode S=1, prefill S=prefill_chunk), and the per-row
+    host-side metadata (block tables, write offsets, last tokens)."""
+
+    def __init__(self, label: str, policy: Optional[ApproxPolicy], model,
+                 cfg: EngineConfig, donate: bool):
+        self.label = label
+        self.policy = policy
+        self.model = model
+        self.sched = Scheduler(cfg.num_slots)
+        mb = cfg.max_blocks_per_seq
+        self.tables = np.full((cfg.num_slots, mb), SENTINEL, np.int32)
+        self.last_tok = np.zeros((cfg.num_slots,), np.int32)
+        block_size = cfg.block_size
+
+        def step(params, kv, tokens, tables, pos, last_idx):
+            cache = dict(kv, block_tables=tables, pos=pos)
+            logits, new_kv = model.paged_step(params, tokens, cache,
+                                              block_size=block_size)
+            last = jnp.take_along_axis(logits, last_idx[:, None, None],
+                                       axis=1)  # (R, 1, V) at true length
+            return jnp.argmax(last[:, 0, :], -1), new_kv
+
+        self.step_fn = jax.jit(step, donate_argnums=(1,) if donate else ())
+
+    @property
+    def prefill_rows(self) -> Dict[int, RequestState]:
+        return {s: st for s, st in self.sched.active.items() if st.prefilling}
+
+    @property
+    def decode_rows(self) -> Dict[int, RequestState]:
+        return {s: st for s, st in self.sched.active.items()
+                if not st.prefilling}
+
+
 class ServeEngine:
-    """Drives a DecoderLM-style model (init_cache / prefill / decode_step)
-    through continuous-batching generation. Synchronous: ``run`` blocks
-    until every submitted request completes."""
+    """Drives a DecoderLM-style model (init_paged_cache / paged_step)
+    through paged continuous-batching generation. Synchronous: ``run``
+    blocks until every submitted request completes."""
 
     def __init__(self, model, params, cfg: EngineConfig):
-        if not hasattr(model, "prefill"):
+        if not hasattr(model, "paged_step"):
             raise TypeError(
-                f"{type(model).__name__} has no prefill(); the serving "
-                "engine requires the DecoderLM cached-forward API")
+                f"{type(model).__name__} has no paged_step(); the serving "
+                "engine requires the DecoderLM paged-cache API")
         self.model = model
         self.params = params
         self.cfg = cfg
-        self.scheduler = Scheduler(cfg.num_slots)
-
-        self.cache = model.init_cache(cfg.num_slots, cfg.max_seq)
-        if "abs_pos" in self.cache:
-            raise ValueError(
-                "slot pool needs a non-ring cache: model window "
-                f"{model.cfg.window} < max_seq {cfg.max_seq}")
-        # scalar -> per-slot lengths: row i of the pool is at offset pos[i]
-        self.cache["pos"] = jnp.zeros((cfg.num_slots,), jnp.int32)
-        self._last_tok = np.zeros((cfg.num_slots,), np.int32)
-
+        self.pool = BlockPool(cfg.blocks, cfg.block_size)
+        self.kv = model.init_paged_cache(cfg.blocks, cfg.block_size)
         # donation: in-place pool updates (not implemented on CPU — jax
         # would warn and copy anyway)
-        donate = jax.default_backend() != "cpu"
-
-        def prefill_fn(params, tokens, lens):
-            # scratch cache sized to the prompt bucket, not max_seq: prefill
-            # attention and allocation scale with the prompt, and the slack
-            # rows of the pool slot keep their previous occupant's K/V —
-            # never attended, by the same write-before-visible invariant
-            # that covers prompt padding (see DecoderLM.prefill)
-            pcache = model.init_cache(tokens.shape[0], tokens.shape[1])
-            logits, pcache = model.prefill(params, tokens, pcache)
-            last = jnp.take_along_axis(logits, (lens - 1)[:, None, None],
-                                       axis=1)  # (R, 1, V) at true length
-            return jnp.argmax(last[:, 0, :], -1), pcache["k"], pcache["v"]
-
-        def insert_fn(cache, k, v, slots, lens):
-            # adopt prefill K/V into pool rows by slot index; padding rows
-            # carry slot id == num_slots (out of range) and are dropped.
-            # k/v: (L, R, spad, KH, HD) — jax scatter keeps the advanced
-            # index axis in place, so no transpose is needed.
-            spad = k.shape[2]
-            return dict(
-                cache,
-                k=cache["k"].at[:, slots, :spad].set(k, mode="drop"),
-                v=cache["v"].at[:, slots, :spad].set(v, mode="drop"),
-                pos=cache["pos"].at[slots].set(lens, mode="drop"))
-
-        def decode_fn(params, cache, tokens):
-            logits, cache = model.decode_step(params, tokens[:, None], cache)
-            return jnp.argmax(logits[:, -1, :], -1), cache
-
-        self._prefill = jax.jit(prefill_fn)
-        self._insert = jax.jit(insert_fn,
-                               donate_argnums=(0,) if donate else ())
-        self._decode = jax.jit(decode_fn,
-                               donate_argnums=(1,) if donate else ())
+        self._donate = jax.default_backend() != "cpu"
+        self._tiers: Dict[str, ApproxPolicy] = {
+            name: parse_policy(spec, name=name) for name, spec in cfg.tiers}
+        self.groups: Dict[Optional[ApproxPolicy], _PolicyGroup] = {}
+        self._pending_alloc: Dict[int, Tuple[List[int], int]] = {}
+        self._next_id = 0
 
         self.step = 0
         self.events: List[Dict[str, Any]] = []
         self.watchdog = StepWatchdog()
         self._step_times: List[float] = []
         self._prefill_s = 0.0
+        self._util_samples: List[float] = []
+        self._util_peak = 0.0
+        self._peak_active = 0
 
     # -- numerics policy ---------------------------------------------------
 
     def resolution_report(self) -> str:
-        """Per-site approximation resolution of the served model (sites
-        appear once their prefill/decode traces have run; see
+        """Per-site approximation resolution, one section per policy group
+        (sites appear once a group's prefill/decode traces have run; see
         repro.policy.site_report)."""
         from repro.policy import site_report
 
-        return site_report(self.model.cfg.approx_policy)
+        parts = []
+        for group in self.groups.values():
+            parts.append(f"== group {group.label} ==")
+            parts.append(site_report(group.model.cfg.approx_policy))
+        if not parts:
+            parts = [site_report(self.model.cfg.approx_policy)]
+        return "\n".join(parts)
 
     # -- request intake ----------------------------------------------------
+
+    def _resolve_policy(self, policy) -> Optional[ApproxPolicy]:
+        if policy is None or isinstance(policy, ApproxPolicy):
+            return policy
+        if isinstance(policy, str):
+            if policy in self._tiers:
+                return self._tiers[policy]
+            if "=" in policy:
+                return parse_policy(policy)
+            raise ValueError(
+                f"unknown policy tier {policy!r}: registered tiers are "
+                f"{sorted(self._tiers)} (or pass a spec like '*=pc3_tr')")
+        raise TypeError(
+            f"Request.policy must be None, a tier name, a spec string, or "
+            f"an ApproxPolicy (got {type(policy).__name__})")
+
+    def _group_for(self, policy: Optional[ApproxPolicy]) -> _PolicyGroup:
+        # group key ignores the policy's display name: a tier name and the
+        # equivalent raw spec resolve to the same jit'd steps + prefix cache
+        key = (None if policy is None
+               else dataclasses.replace(policy, name=""))
+        group = self.groups.get(key)
+        if group is None:
+            if policy is None:
+                label, model = "base", self.model
+            else:
+                label = policy.name or f"policy_{len(self.groups)}"
+                from repro.models.registry import build_model
+
+                model = build_model(self.model.cfg.with_policy(policy))
+            group = _PolicyGroup(label, key, model, self.cfg, self._donate)
+            self.groups[key] = group
+        return group
 
     def submit(self, request: Request) -> RequestState:
         if not request.prompt:
@@ -195,54 +330,52 @@ class ServeEngine:
         need = len(request.prompt) + request.max_new_tokens
         if need > self.cfg.max_seq:
             raise ValueError(
-                f"request needs {need} cache rows > max_seq "
+                f"request needs {need} cache positions > max_seq "
                 f"{self.cfg.max_seq}")
-        state = self.scheduler.submit(request, now=time.perf_counter())
+        group = self._group_for(self._resolve_policy(request.policy))
+        state = group.sched.submit(request, now=time.perf_counter())
+        state.request_id = self._next_id  # engine-global, not per-group
+        self._next_id += 1
+        state.group = group.label
         if state.eos_id is None:  # engine default; the Request is not mutated
             state.eos_id = self.cfg.eos_id
         return state
 
-    # -- engine internals ----------------------------------------------------
+    # -- engine internals --------------------------------------------------
 
     def _event(self, kind: str, state: RequestState, slot: int, **kw):
         self.events.append(dict(step=self.step, event=kind,
                                 request_id=state.request_id,
-                                slot=slot, **kw))
+                                slot=slot, group=state.group, **kw))
 
-    def _admit(self, admitted: List[RequestState]):
-        """One batched prefill for this tick's admissions: pad rows to a
-        power of two and prompt length to the bucket, scatter K/V into the
-        pool, seed each slot with its first generated token."""
-        rpad = _next_pow2(len(admitted))
-        spad = min(_round_up(max(len(s.request.prompt) for s in admitted),
-                             self.cfg.prefill_bucket), self.cfg.max_seq)
-        tokens = np.zeros((rpad, spad), np.int32)
-        lens = np.ones((rpad,), np.int32)
-        slots = np.full((rpad,), self.cfg.num_slots, np.int32)  # OOB: drop
-        for i, state in enumerate(admitted):
-            prompt = state.request.prompt
-            tokens[i, :len(prompt)] = prompt
-            lens[i] = len(prompt)
-            slots[i] = state.slot
-        t0 = time.perf_counter()
-        first, k, v = self._prefill(self.params, jnp.asarray(tokens),
-                                    jnp.asarray(lens))
-        self.cache = self._insert(self.cache, k, v, jnp.asarray(slots),
-                                  jnp.asarray(lens))
-        first = np.asarray(first)  # blocks; prefill wall time is honest
-        dt = time.perf_counter() - t0
-        self._prefill_s += dt
-        now = time.perf_counter()
-        for i, state in enumerate(admitted):
-            state.prefill_s = dt
-            state.first_token_time = now
+    def _try_reserve(self, group: _PolicyGroup, state: RequestState) -> bool:
+        """Admission gate: reserve the request's whole-lifetime KV pages
+        (prompt + gen - 1 positions — the final token is never written).
+        Reserving up front means an admitted request can always finish."""
+        total = len(state.request.prompt) + state.request.max_new_tokens - 1
+        alloc = self.pool.allocate(state.request_id, state.request.prompt,
+                                   max(total, 1), policy_key=group.policy)
+        if alloc is None:
+            return False
+        self._pending_alloc[state.request_id] = alloc
+        return True
+
+    def _admit(self, group: _PolicyGroup, admitted: List[RequestState]):
+        for state in admitted:
+            table, cached_len = self._pending_alloc.pop(state.request_id)
+            group.tables[state.slot] = SENTINEL
+            group.tables[state.slot, :len(table)] = table
+            state.next_pos = cached_len
+            state.cached_len = cached_len
             self._event("admit", state, state.slot,
-                        joined_running=state.joined_running_batch)
-            self._append_token(state, int(first[i]))
+                        joined_running=state.joined_running_batch,
+                        blocks=len(table),
+                        cached_blocks=cached_len // self.cfg.block_size)
 
-    def _append_token(self, state: RequestState, token: int):
+    def _append_token(self, group: _PolicyGroup, state: RequestState,
+                      token: int):
         state.output.append(token)
-        self._last_tok[state.slot] = token
+        group.last_tok[state.slot] = token
         reason = ""
         if state.eos_id is not None and token == state.eos_id:
             reason = "eos"
@@ -250,46 +383,120 @@ class ServeEngine:
             reason = "length"
         if reason:
             slot = state.slot  # retire() resets it; event wants the real one
-            self.scheduler.retire(slot, reason, self.step,
-                                  now=time.perf_counter())
+            group.sched.retire(slot, reason, self.step,
+                               now=time.perf_counter())
+            group.tables[slot] = SENTINEL
+            self.pool.free(state.request_id)
             self._event("retire", state, slot, reason=reason)
 
-    def tick(self) -> bool:
-        """One engine iteration: admit -> decode one token for every active
-        slot -> retire finished rows. Returns False when fully drained."""
-        if not self.scheduler.has_work:
-            return False
-        now = time.perf_counter()
-        for waiting in self.scheduler.waiting:  # trace replay: stamp arrival
-            if (waiting.arrival_time == 0.0
-                    and waiting.request.arrival_step <= self.step):
-                waiting.arrival_time = now
-        admitted = self.scheduler.admit(self.step)
-        if admitted:
-            self._admit(admitted)
-        if not self.scheduler.active:  # only future arrivals left
-            self.step += 1
-            return self.scheduler.has_work
+    def _run_prefill(self, group: _PolicyGroup):
+        """One prefill chunk for every row of ``group`` still ingesting its
+        prompt; rows that reach the last prompt token emit their first
+        generated token. Decode rows are masked out (sentinel tables) so
+        their K/V is untouched."""
+        rows = group.prefill_rows
+        if not rows:
+            return
+        cfg = self.cfg
+        chunk = cfg.prefill_chunk
+        r = cfg.num_slots
+        tokens = np.zeros((r, chunk), np.int32)
+        tables = np.full_like(group.tables, SENTINEL)
+        pos = np.zeros((r,), np.int32)
+        last_idx = np.zeros((r,), np.int32)
+        finishing: Dict[int, RequestState] = {}
+        for slot, state in rows.items():
+            prompt = state.request.prompt
+            piece = prompt[state.next_pos:state.next_pos + chunk]
+            tokens[slot, :len(piece)] = piece
+            tables[slot] = group.tables[slot]
+            pos[slot] = state.next_pos
+            last_idx[slot] = len(piece) - 1
+            if state.next_pos + len(piece) == len(prompt):
+                finishing[slot] = state
+            state.next_pos += len(piece)
         t0 = time.perf_counter()
-        next_tok, self.cache = self._decode(
-            self.params, self.cache, jnp.asarray(self._last_tok))
-        next_tok = np.asarray(next_tok)  # host sync: scheduler needs tokens
+        tok, self.kv = group.step_fn(
+            self.params, self.kv, jnp.asarray(tokens), jnp.asarray(tables),
+            jnp.asarray(pos), jnp.asarray(last_idx))
+        tok = np.asarray(tok)  # blocks; prefill wall time is honest
+        dt = time.perf_counter() - t0
+        self._prefill_s += dt
+        now = time.perf_counter()
+        for slot, state in rows.items():
+            state.prefill_s += dt
+            if slot in finishing:
+                state.first_token_time = now
+                self.pool.commit_prefix(state.request_id)
+                self._append_token(group, state, int(tok[slot]))
+            if state.request_id in self.pool:
+                self.pool.advance(state.request_id, state.seq_len)
+
+    def _run_decode(self, group: _PolicyGroup):
+        """One decode token for every generating row of ``group``; prefill
+        and idle rows are masked out (sentinel tables)."""
+        rows = group.decode_rows
+        if not rows:
+            return
+        r = self.cfg.num_slots
+        tables = np.full_like(group.tables, SENTINEL)
+        pos = np.zeros((r,), np.int32)
+        for slot, state in rows.items():
+            tables[slot] = group.tables[slot]
+            pos[slot] = state.seq_len  # write position of the fed-back token
+        t0 = time.perf_counter()
+        tok, self.kv = group.step_fn(
+            self.params, self.kv, jnp.asarray(group.last_tok[:, None]),
+            jnp.asarray(tables), jnp.asarray(pos),
+            jnp.zeros((r,), jnp.int32))
+        tok = np.asarray(tok)  # host sync: scheduler needs tokens
         dt = time.perf_counter() - t0
         self._step_times.append(dt)
         self.watchdog.observe(dt)
-        self.step += 1
-        for slot, state in list(self.scheduler.active.items()):
-            self._append_token(state, int(next_tok[slot]))
-        return self.scheduler.has_work
+        for slot, state in list(rows.items()):
+            self._append_token(group, state, int(tok[slot]))
+            if state.request_id in self.pool:
+                self.pool.advance(state.request_id, state.seq_len)
 
-    # -- driver --------------------------------------------------------------
+    def tick(self) -> bool:
+        """One engine iteration: admit -> one prefill chunk per ingesting
+        row -> one decode token per generating row, per policy group.
+        Returns False when fully drained."""
+        if not any(g.sched.has_work for g in self.groups.values()):
+            return False
+        now = time.perf_counter()
+        for group in self.groups.values():
+            for waiting in group.sched.waiting:  # trace replay: stamp arrival
+                if (waiting.arrival_time == 0.0
+                        and waiting.request.arrival_step <= self.step):
+                    waiting.arrival_time = now
+            admitted = group.sched.admit(
+                self.step,
+                can_admit=lambda st, g=group: self._try_reserve(g, st))
+            if admitted:
+                self._admit(group, admitted)
+        for group in self.groups.values():
+            self._run_prefill(group)
+        for group in self.groups.values():
+            self._run_decode(group)
+        active = sum(len(g.sched.active) for g in self.groups.values())
+        self._peak_active = max(self._peak_active, active)
+        if active:
+            util = self.pool.utilization()["pool_util"]
+            self._util_samples.append(util)
+            self._util_peak = max(self._util_peak, util)
+        self.step += 1
+        return any(g.sched.has_work for g in self.groups.values())
+
+    # -- driver ------------------------------------------------------------
 
     def run(self, requests: Sequence[Request]) -> ServeReport:
         """Serve ``requests`` to completion and report. Single-use: the
         report aggregates everything the engine has done, so reuse would
         fold the previous run's accounting into the next report — build a
         fresh engine (or drive tick()/submit() yourself) instead."""
-        if self.scheduler.finished or self._step_times:
+        if self._step_times or any(g.sched.finished
+                                   for g in self.groups.values()):
             raise RuntimeError(
                 "ServeEngine.run() is single-use; build a fresh engine")
         for r in requests:
@@ -298,7 +505,8 @@ class ServeEngine:
         while self.tick():
             pass
         wall = time.perf_counter() - t0
-        done = self.scheduler.finished
+        done = [s for g in self.groups.values() for s in g.sched.finished]
+        done.sort(key=lambda s: s.request_id)
         generated = sum(len(s.output) for s in done)
         decode_s = float(sum(self._step_times))
         # prefill produces 1 token/request; the rest ride decode steps
@@ -319,5 +527,11 @@ class ServeEngine:
             step_p99_ms=_pct([t * 1e3 for t in self._step_times], 99),
             joined_mid_stream=sum(s.joined_running_batch for s in done),
             straggler_steps=self.watchdog.stragglers,
+            kv_util_mean=(float(np.mean(self._util_samples))
+                          if self._util_samples else 0.0),
+            kv_util_peak=self._util_peak,
+            peak_active_requests=self._peak_active,
+            prefix_hits=self.pool.prefix_hits,
+            policy_groups=len(self.groups),
             events=self.events,
         )

@@ -1,30 +1,40 @@
-"""Continuous-batching request scheduler: FCFS over a fixed KV-slot pool.
+"""Continuous-batching request scheduler: FCFS over fixed decode rows.
 
 Iteration-level scheduling (Orca / vLLM style) without async machinery:
-the engine runs one batched decode step at a time; between steps the
-scheduler retires finished sequences and admits waiting requests into the
-freed slots, so new work joins the running batch mid-stream instead of
-waiting for a full batch drain. A "slot" is one row of the engine's
-fixed-capacity cache pool — admission binds a request to a slot, retirement
-returns the slot for reuse.
+the engine runs one batched step at a time; between steps the scheduler
+retires finished sequences and admits waiting requests into freed rows, so
+new work joins the running batch mid-stream instead of waiting for a full
+batch drain. A "slot" is one *decode row* of a policy group's fixed-shape
+step — admission binds a request to a row; its KV memory lives elsewhere,
+in the paged block pool (kv_pool.py), so admission is additionally gated by
+an optional ``can_admit`` callback (page reservation). The engine runs one
+Scheduler per resolved approximation policy: requests batch with their tier
+and never force a cross-tier recompile.
 """
 from __future__ import annotations
 
 import collections
 import dataclasses
 import itertools
-from typing import Deque, Dict, List, Optional
+from typing import Callable, Deque, Dict, List, Optional, Union
 
 
 @dataclasses.dataclass
 class Request:
     """One generation request. ``arrival_step`` lets drivers replay a trace:
-    the scheduler will not admit the request before that engine step."""
+    the scheduler will not admit the request before that engine step.
+
+    ``policy`` selects the request's approximation numerics tier: ``None``
+    (the engine's base model policy), a tier name registered in
+    ``EngineConfig.tiers`` (e.g. ``"free"``), a raw policy spec string
+    (``"*/attn/*=exact,*=pc3_tr"``), or an ``ApproxPolicy``. Requests with
+    the same *resolved* policy share jit'd steps (one policy group each)."""
 
     prompt: List[int]
     max_new_tokens: int
     eos_id: Optional[int] = None
     arrival_step: int = 0
+    policy: Union[None, str, "object"] = None  # name | spec | ApproxPolicy
 
 
 @dataclasses.dataclass
@@ -32,14 +42,21 @@ class RequestState:
     """Scheduler-owned runtime state + accounting for one request."""
 
     request: Request
-    request_id: int = -1  # scheduler-assigned; the Request is never mutated
-    slot: int = -1
+    request_id: int = -1  # engine-assigned; the Request is never mutated
+    slot: int = -1        # decode row within the policy group
+    group: str = ""       # resolved policy-group label (accounting)
     output: List[int] = dataclasses.field(default_factory=list)
     eos_id: Optional[int] = None  # resolved (request or engine default)
     finish_reason: str = ""
     admit_step: int = -1
     finish_step: int = -1
     joined_running_batch: bool = False  # admitted while others were decoding
+    # chunked-prefill progress: prompt tokens [0, next_pos) are already in
+    # the KV pool (cached_len of them adopted from the prefix cache, the
+    # rest written by previous chunks); prefill is done when
+    # next_pos == len(prompt) and the first token has been emitted.
+    next_pos: int = 0
+    cached_len: int = 0
     # wall-clock accounting (seconds, engine-stamped). arrival_time is when
     # the request became admissible — equal to submit_time for immediate
     # arrivals, stamped later for arrival_step-gated trace replays, so
@@ -48,7 +65,7 @@ class RequestState:
     arrival_time: float = 0.0
     first_token_time: float = 0.0
     finish_time: float = 0.0
-    prefill_s: float = 0.0  # wall time of the prefill batch it rode in
+    prefill_s: float = 0.0  # wall time of the prefill chunks it rode in
 
     @property
     def ttft_s(self) -> float:
@@ -58,9 +75,18 @@ class RequestState:
     def latency_s(self) -> float:
         return self.finish_time - self.arrival_time
 
+    @property
+    def seq_len(self) -> int:
+        """Logical positions holding real K/V (prefilled + generated)."""
+        return self.next_pos + max(0, len(self.output) - 1)
+
+    @property
+    def prefilling(self) -> bool:
+        return self.slot >= 0 and not self.output
+
 
 class Scheduler:
-    """FCFS continuous-batching scheduler over ``num_slots`` cache slots."""
+    """FCFS continuous-batching scheduler over ``num_slots`` decode rows."""
 
     def __init__(self, num_slots: int):
         self.num_slots = num_slots
@@ -88,11 +114,16 @@ class Scheduler:
         self.waiting.append(state)
         return state
 
-    def admit(self, step: int) -> List[RequestState]:
+    def admit(self, step: int,
+              can_admit: Optional[Callable[[RequestState], bool]] = None
+              ) -> List[RequestState]:
         """Bind waiting requests (whose arrival time has come) to free
-        slots — FCFS among the arrived; an unarrived request does not block
-        arrived ones queued behind it. Returns the newly admitted states;
-        the caller must prefill them before the next decode step."""
+        rows — FCFS among the arrived; an unarrived request does not block
+        arrived ones queued behind it. ``can_admit`` gates each admission on
+        external resources (KV page reservation): when it refuses, admission
+        stops — FCFS blocking, so a large request is not starved by smaller
+        ones slipping past it. Returns the newly admitted states; the caller
+        must start their prefill before the next decode step."""
         admitted: List[RequestState] = []
         running = bool(self.active)
         not_yet_arrived: List[RequestState] = []
@@ -101,6 +132,9 @@ class Scheduler:
             if state.request.arrival_step > step:
                 not_yet_arrived.append(state)
                 continue
+            if can_admit is not None and not can_admit(state):
+                self.waiting.appendleft(state)  # blocked on memory: FCFS
+                break
             state.slot = self._free.pop()
             state.admit_step = step
             state.joined_running_batch = running
@@ -111,7 +145,7 @@ class Scheduler:
 
     def retire(self, slot: int, reason: str, step: int,
                now: float = 0.0) -> RequestState:
-        """Finish the request in ``slot`` and return the slot to the pool."""
+        """Finish the request in ``slot`` and return the row to the pool."""
         state = self.active.pop(slot)
         state.finish_reason = reason
         state.finish_step = step

