@@ -54,7 +54,7 @@ def _train(model: CNNModel, gen, steps: int, lr: float = 1e-3):
         params, opt, _ = apply_updates(params, grads, opt, ocfg)
         return params, opt, loss
 
-    for i in range(steps):
+    for _ in range(steps):
         b = next(gen)
         params, opt, loss = step(params, opt, jnp.asarray(b["images"]),
                                  jnp.asarray(b["labels"]))

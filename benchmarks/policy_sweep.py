@@ -6,9 +6,10 @@ per op-site. This sweep measures what that buys: on LeNet-5 (trained exact,
 evaluated under each policy — the paper's Table-2 protocol) and on a smoke
 TinyLlama (logit fidelity vs the exact forward), each policy reports task
 quality next to the analytical multiply-energy estimate (core/energy Eq 4-6)
-accumulated from the per-site resolution log — so mixed policies (sensitive
-sites exact, middle layers approximate) land between all-exact and
-all-approximate on both axes.
+taken from the static analyzer's site table (repro.analyze — the same
+numbers daism-lint reports, no runtime resolution log needed) — so mixed
+policies (sensitive sites exact, middle layers approximate) land between
+all-exact and all-approximate on both axes.
 
 Standalone:  PYTHONPATH=src:. python benchmarks/policy_sweep.py [--smoke]
 Harness:     PYTHONPATH=src:. python benchmarks/run.py policy_sweep
@@ -23,6 +24,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro import policy as P
+from repro.analyze import trace_site_graph
 from repro.configs import get_config
 from repro.core import Backend, DaismConfig, Variant
 from repro.data.synthetic import eval_set, image_batches
@@ -91,8 +93,12 @@ def _accuracy(cfg, params, batches) -> float:
     return correct / total
 
 
-def _energy_row(policy: P.ApproxPolicy):
-    used, exact = P.estimated_energy_uj(policy)
+def _energy_row(cfg, policy: P.ApproxPolicy, *, batch: int, seq: int = 8):
+    """Static per-policy energy from the analyzer's abstract site table
+    (eval_shape trace, batch-shaped like the measurement runs) — the sweep
+    no longer re-derives MAC counts from the runtime resolution log."""
+    graph = trace_site_graph(cfg, policy, batch=batch, seq=seq)
+    used, exact = graph.energy_uj()
     saving = 100 * (1 - used / exact) if exact else 0.0
     return round(used, 3), round(saving, 1)
 
@@ -106,14 +112,14 @@ def run(smoke: bool = False):
     test = eval_set(image_batches(10, 64, shape=(28, 28, 1), noise=0.8,
                                   seed=99), 2 if smoke else 4)
     lenet_acc: Dict[str, float] = {}
+    eval_batch = len(test[0]["labels"]) if test else 64
     for name, pol in _lenet_policies(smoke).items():
-        P.clear_log(pol)
         ecfg = cfg.with_policy(pol)
         t0 = time.perf_counter()
         acc = _accuracy(ecfg, params, test)
         us = (time.perf_counter() - t0) * 1e6 / max(
             sum(len(b["labels"]) for b in test), 1)
-        uj, saving = _energy_row(pol)
+        uj, saving = _energy_row(cfg, pol, batch=eval_batch)
         lenet_acc[name] = float(acc)
         rows.append({"name": f"policy_lenet5_{name}",
                      "us_per_call": round(us, 1),
@@ -129,7 +135,6 @@ def run(smoke: bool = False):
     e = np.asarray(exact_logits, np.float32)
     lm_corr: Dict[str, float] = {}
     for name, pol in _lm_policies(lm_cfg.n_layers).items():
-        P.clear_log(pol)
         t0 = time.perf_counter()
         logits, _ = build_model(lm_cfg.with_policy(pol)).forward(
             lm_params, {"tokens": toks})
@@ -137,7 +142,8 @@ def run(smoke: bool = False):
         a = np.asarray(logits, np.float32)
         corr = float(np.corrcoef(e.ravel(), a.ravel())[0, 1])
         agree = float((e.argmax(-1) == a.argmax(-1)).mean())
-        uj, saving = _energy_row(pol)
+        uj, saving = _energy_row(lm_cfg, pol, batch=toks.shape[0],
+                                 seq=toks.shape[1])
         lm_corr[name] = corr
         rows.append({"name": f"policy_tinyllama_{name}",
                      "us_per_call": round(us, 1),

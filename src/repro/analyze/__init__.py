@@ -1,0 +1,79 @@
+"""daism-lint: static analysis of (model, policy, engine) triples.
+
+The analyzer abstract-interprets a registered model config under an
+``ApproxPolicy`` with ``jax.eval_shape`` — no weights allocated, no kernels
+run — materializes the complete op-site graph, and runs pluggable checkers
+over it (policy reachability, backend legality, Pallas tiling, recompile
+hazards, serving config). See ``launch/lint.py`` for the CLI and
+``analyze/checkers.py`` for the lint-code table.
+
+Quick start::
+
+    from repro.analyze import analyze, format_text
+
+    report = analyze("tinyllama_1_1b", "*/attn/*=exact,*=pc3_tr")
+    print(format_text(report))
+    raise SystemExit(report.exit_code)
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+from .checkers import (CATEGORIES, Finding, check_backend, check_energy,
+                       check_policy, check_recompile, check_serving,
+                       check_tiling, engine_config_finding, run_checkers)
+from .report import AnalysisReport, format_json, format_text
+from .sitegraph import SiteGraph, SiteRecord, trace_site_graph
+
+__all__ = [
+    "analyze", "preflight", "AnalysisReport", "Finding",
+    "SiteGraph", "SiteRecord", "trace_site_graph", "run_checkers",
+    "check_policy", "check_backend", "check_tiling", "check_recompile",
+    "check_energy", "check_serving", "engine_config_finding",
+    "format_text", "format_json", "CATEGORIES",
+]
+
+
+def analyze(cfg, policy=None, *, engine_cfg=None, serving: bool = True,
+            advisory_serving: bool = False, batch: int = 1, seq: int = 8,
+            vmem_budget_mib: float = 16.0, max_segments: int = 4,
+            max_kernel_variants: int = 8) -> AnalysisReport:
+    """Lint ``cfg`` (an ArchConfig or a registered arch name) under
+    ``policy`` (None = the config's own, a spec string, or an ApproxPolicy).
+
+    ``engine_cfg`` focuses the serving checks on a concrete deployment;
+    without one they run against the default ``EngineConfig``.
+    ``advisory_serving`` caps serving findings at warning severity (the
+    CI sweep mode, where no deployment is actually being launched).
+    """
+    if isinstance(cfg, str):
+        from repro.configs import get_config
+        cfg = get_config(cfg)
+    graph = trace_site_graph(cfg, policy, batch=batch, seq=seq)
+    findings, categories = run_checkers(
+        graph, engine_cfg, serving=serving,
+        advisory_serving=advisory_serving, vmem_budget_mib=vmem_budget_mib,
+        max_segments=max_segments, max_kernel_variants=max_kernel_variants)
+    return AnalysisReport(graph=graph, findings=findings,
+                          categories=categories)
+
+
+def preflight(cfg, policy=None, *, engine_cfg=None, serving: bool = True,
+              label: str = "preflight",
+              strict: bool = True) -> Optional[AnalysisReport]:
+    """Launcher hook: lint before committing to params/compilation.
+
+    Prints findings (site table omitted), raises ``SystemExit`` on
+    error-severity findings when ``strict``. Returns the report.
+    """
+    report = analyze(cfg, policy, engine_cfg=engine_cfg, serving=serving)
+    visible = [f for f in report.findings if f.severity != "info"]
+    if visible:
+        print(f"-- {label}: daism-lint --")
+        for f in visible:
+            print(f"  {f}")
+    if strict and report.errors:
+        raise SystemExit(
+            f"{label}: daism-lint found {len(report.errors)} error(s) — "
+            "fix the policy/engine config or pass --no-preflight")
+    return report

@@ -1,0 +1,328 @@
+"""Pluggable checkers over a :class:`~repro.analyze.sitegraph.SiteGraph`.
+
+Each checker is a pure function ``SiteGraph -> [Finding]``. Codes are
+stable (the README troubleshooting table maps each to its fix):
+
+=======  ========  ====================================================
+code     severity  meaning
+=======  ========  ====================================================
+POL001   error     policy rule matches zero op-sites
+POL002   warning   rule fully shadowed by earlier rules
+POL003   warning   catch-all rule ordered before more-specific rules
+POL004   warning   deprecated ``ArchConfig.daism`` uniform shim in use
+BCK001   error     backend illegal for the site's operand dtype
+TIL001   warning   GEMM dims not divisible by Pallas block sizes
+TIL002   warning   per-kernel VMEM footprint exceeds the budget
+TIL003   info      Pallas sites auto-select interpret mode here
+RCP001   warning   policy shatters a scanned stack into many segments
+RCP002   warning   dispatcher cache would hold many kernel variants
+ENE001   info      estimated multiply-energy summary
+SRV000   error     EngineConfig rejected at construction
+SRV001   error*    model ``window`` incompatible with the paged cache
+SRV002   error*    KV pool cannot hold one max-length request
+SRV003   warning   KV pool oversubscribed vs expected concurrency
+SRV004   warning   two tiers resolve to the same policy group
+SRV005   error*    tier policy spec invalid for this model
+SRV006   info      model has no paged decode path; serving checks skipped
+=======  ========  ====================================================
+
+``error*`` codes downgrade to warnings in *advisory* mode (the ``--all``
+CI sweep, where no serving deployment is actually requested).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List
+
+import jax
+
+from repro.core.config import Backend
+from repro.policy import (auto_interpret, describe_config, parse_policy,
+                          validate_for_dtype)
+
+from .sitegraph import SiteGraph
+
+SEVERITIES = ("error", "warning", "info")
+CATEGORIES = ("policy", "backend", "tiling", "recompile", "energy", "serving")
+
+
+@dataclasses.dataclass(frozen=True)
+class Finding:
+    """One analyzer diagnostic, anchored to a site/rule where possible."""
+
+    code: str
+    severity: str      # error | warning | info
+    category: str      # see CATEGORIES
+    message: str
+    site: str = ""     # site path or rule/tier anchor ("" = whole config)
+
+    def __str__(self) -> str:
+        where = f" [{self.site}]" if self.site else ""
+        return f"{self.code} {self.severity}: {self.message}{where}"
+
+
+def check_policy(graph: SiteGraph) -> List[Finding]:
+    """Rule reachability: zero-match, shadowing, catch-all ordering, and the
+    deprecated ``daism`` shim."""
+    findings = []
+    policy = graph.policy
+    site_keys = [(s.path, s.kind) for s in graph.sites]
+    n_rules = len(policy.rules)
+    matched = [set() for _ in range(n_rules)]  # sites the pattern matches
+    won = [set() for _ in range(n_rules)]      # sites the rule resolves
+    for path, kind in site_keys:
+        winner = None
+        for i, rule in enumerate(policy.rules):
+            if rule.matches(path, kind):
+                matched[i].add((path, kind))
+                if winner is None:
+                    winner = i
+        if winner is not None:
+            won[winner].add((path, kind))
+    for i, rule in enumerate(policy.rules):
+        anchor = f"rule {i}: {rule.pattern}"
+        if not matched[i]:
+            findings.append(Finding(
+                "POL001", "error", "policy",
+                f"rule {i} ({rule.pattern}={describe_config(rule.config)}) "
+                f"matches none of the model's {len(site_keys)} op-sites — "
+                "it silently does nothing; fix the glob or delete the rule",
+                site=anchor))
+        elif not won[i]:
+            shadows = sorted({j for j in range(i)
+                              for s in matched[i] if s in matched[j]})
+            by = ", ".join(f"rule {j} ({policy.rules[j].pattern})"
+                           for j in shadows[:3])
+            findings.append(Finding(
+                "POL002", "warning", "policy",
+                f"rule {i} ({rule.pattern}={describe_config(rule.config)}) "
+                f"is fully shadowed by {by}: every site it matches is "
+                "claimed earlier (first match wins); reorder or remove it",
+                site=anchor))
+        if matched[i] and len(matched[i]) == len(site_keys) and i < n_rules - 1:
+            findings.append(Finding(
+                "POL003", "warning", "policy",
+                f"rule {i} ({rule.pattern}) is a catch-all placed before "
+                f"{n_rules - 1 - i} more-specific rule(s), which can never "
+                "fire; move the catch-all last (or use default=)",
+                site=anchor))
+    if graph.cfg.policy is None and not graph.cfg.daism.exact:
+        findings.append(Finding(
+            "POL004", "warning", "policy",
+            "config uses the deprecated ArchConfig.daism uniform shim "
+            f"(daism={describe_config(graph.cfg.daism)}); set "
+            f"policy=parse_policy('*={describe_config(graph.cfg.daism)}') "
+            "instead"))
+    return findings
+
+
+def check_backend(graph: SiteGraph) -> List[Finding]:
+    """Backend legality per site, ahead of any trace: the exact errors
+    ``resolve_site`` would raise mid-jit, reported as findings."""
+    findings = []
+    for s in graph.sites:
+        try:
+            validate_for_dtype(s.config, s.dtype, site=s.path)
+        except ValueError as e:
+            findings.append(Finding("BCK001", "error", "backend", str(e),
+                                    site=s.path))
+    return findings
+
+
+# VMEM bytes per kernel grid step (see kernels/daism_matmul.py docstring):
+# ~3 live (bm, bk, bn) f32 temporaries + the resident f32 out tile, plus the
+# streamed bf16 a/w tiles.
+def _vmem_bytes(bm: int, bk: int, bn: int) -> int:
+    return (3 * bm * bk * bn + bm * bn) * 4 + (bm * bk + bk * bn) * 2
+
+
+def check_tiling(graph: SiteGraph, *,
+                 vmem_budget_mib: float = 16.0) -> List[Finding]:
+    """Pallas tiling sanity: padding waste and VMEM footprint estimates."""
+    findings = []
+    interp_sites = []
+    for s in graph.sites:
+        if s.config.exact or s.config.backend is not Backend.PALLAS:
+            continue
+        m, k, n = s.dims
+        c = s.config
+        pad = {"m": (m, c.block_m), "k": (k, c.block_k), "n": (n, c.block_n)}
+        ragged = {ax: (dim, blk) for ax, (dim, blk) in pad.items()
+                  if dim % blk}
+        if ragged:
+            padded = [f"{ax}: {dim} -> {-(-dim // blk) * blk}"
+                      for ax, (dim, blk) in ragged.items()]
+            findings.append(Finding(
+                "TIL001", "warning", "tiling",
+                f"GEMM dims (m={m}, k={k}, n={n}) not divisible by Pallas "
+                f"blocks (bm={c.block_m}, bk={c.block_k}, bn={c.block_n}); "
+                f"the kernel pads {', '.join(padded)} — wasted compute and "
+                "an extra compiled shape",
+                site=s.path))
+        vmem = _vmem_bytes(c.block_m, c.block_k, c.block_n)
+        if vmem > vmem_budget_mib * (1 << 20):
+            findings.append(Finding(
+                "TIL002", "warning", "tiling",
+                f"estimated per-kernel VMEM footprint {vmem / (1 << 20):.1f} "
+                f"MiB exceeds the {vmem_budget_mib:.0f} MiB budget "
+                f"(bm={c.block_m}, bk={c.block_k}, bn={c.block_n}); shrink "
+                "the block sizes",
+                site=s.path))
+        if s.config.interpret is None and auto_interpret(s.config):
+            interp_sites.append(s.path)
+    if interp_sites:
+        findings.append(Finding(
+            "TIL003", "info", "tiling",
+            f"{len(interp_sites)} Pallas site(s) will auto-select "
+            f"interpret mode on this host (backend={jax.default_backend()}) "
+            "— orders of magnitude slower than compiled; use backend 'jnp' "
+            "for CPU runs",
+            site=interp_sites[0]))
+    return findings
+
+
+def check_recompile(graph: SiteGraph, *, max_segments: int = 4,
+                    max_kernel_variants: int = 8) -> List[Finding]:
+    """Recompile hazards: segment shatter and kernel-cache pressure."""
+    findings = []
+    for stack, segs in graph.segments.items():
+        if len(segs) > max_segments:
+            findings.append(Finding(
+                "RCP001", "warning", "recompile",
+                f"policy splits the scanned stack '{stack}' into "
+                f"{len(segs)} uniform segments (> {max_segments}): each is "
+                "a separate lax.scan trace, so HLO size and compile time "
+                "grow with the rule granularity; coarsen the per-depth "
+                "rules",
+                site=stack))
+    variants = {s.config for s in graph.sites if not s.config.exact}
+    if len(variants) > max_kernel_variants:
+        findings.append(Finding(
+            "RCP002", "warning", "recompile",
+            f"policy resolves {len(variants)} distinct non-exact "
+            f"DaismConfigs (> {max_kernel_variants}): the dispatcher "
+            "kernel cache compiles one kernel per (config, shape) pair; "
+            "merge near-identical configs"))
+    return findings
+
+
+def check_energy(graph: SiteGraph) -> List[Finding]:
+    """Always-on summary so the energy math is visible in every report."""
+    used, exact = graph.energy_uj()
+    if exact <= 0:
+        return [Finding("ENE001", "info", "energy",
+                        "no contraction sites traced; energy model idle")]
+    saved = 100.0 * (1.0 - used / exact)
+    return [Finding(
+        "ENE001", "info", "energy",
+        f"estimated multiply energy {used:.2f} uJ vs all-exact "
+        f"{exact:.2f} uJ ({saved:+.1f}% saved) over {graph.total_macs():,d} "
+        f"MACs / {len(graph.sites)} sites")]
+
+
+def _sev(advisory: bool) -> str:
+    return "warning" if advisory else "error"
+
+
+def check_serving(graph: SiteGraph, engine_cfg=None, *,
+                  advisory: bool = False) -> List[Finding]:
+    """Serving-config lints against the traced model (paged engine)."""
+    from repro.serve.engine import EngineConfig
+
+    if graph.cfg.family not in ("dense", "moe"):
+        return [Finding(
+            "SRV006", "info", "serving",
+            f"family '{graph.cfg.family}' has no paged decode path; "
+            "serving checks skipped")]
+    findings = []
+    if engine_cfg is None:
+        engine_cfg = EngineConfig()
+    if graph.cfg.window:
+        findings.append(Finding(
+            "SRV001", _sev(advisory), "serving",
+            f"ArchConfig.window={graph.cfg.window} is incompatible with "
+            "the paged KV cache (ring buffers roll in place, pages are "
+            "freed whole); serve with window=0 or the slot engine"))
+
+    capacity = engine_cfg.blocks * engine_cfg.block_size
+    if capacity < engine_cfg.max_seq:
+        findings.append(Finding(
+            "SRV002", _sev(advisory), "serving",
+            f"KV pool holds {capacity} tokens ({engine_cfg.blocks} pages x "
+            f"{engine_cfg.block_size}) < max_seq={engine_cfg.max_seq}: a "
+            "max-length request can never be admitted; add pages or lower "
+            "max_seq"))
+    groups = max(1, len(engine_cfg.tiers))
+    demand = engine_cfg.num_slots * groups * engine_cfg.max_seq
+    if capacity < demand and capacity >= engine_cfg.max_seq:
+        findings.append(Finding(
+            "SRV003", "warning", "serving",
+            f"KV pool ({capacity} tokens) covers only "
+            f"{capacity / demand:.0%} of peak demand (num_slots="
+            f"{engine_cfg.num_slots} x {groups} policy group(s) x max_seq="
+            f"{engine_cfg.max_seq} = {demand}): full-width decode at max "
+            "length will stall on page allocation"))
+
+    site_keys = [(s.path, s.kind) for s in graph.sites]
+    tier_groups = {}
+    for name, spec in engine_cfg.tiers:
+        try:
+            pol = parse_policy(spec, name=name)
+        except ValueError as e:
+            findings.append(Finding(
+                "SRV005", _sev(advisory), "serving",
+                f"tier '{name}' policy spec rejected: {e}", site=name))
+            continue
+        key = dataclasses.replace(pol, name="")
+        tier_groups.setdefault(key, []).append(name)
+        for i, rule in enumerate(pol.rules):
+            if not any(rule.matches(p, k) for p, k in site_keys):
+                findings.append(Finding(
+                    "SRV005", "warning", "serving",
+                    f"tier '{name}' rule {i} ({rule.pattern}) matches no "
+                    f"op-site of {graph.cfg.name}; the tier silently "
+                    "degrades to its remaining rules", site=name))
+        for where, dcfg in [(f"tier '{name}' rule {i} ({r.pattern})", r.config)
+                            for i, r in enumerate(pol.rules)] + [
+                                (f"tier '{name}' default", pol.default)]:
+            try:
+                validate_for_dtype(dcfg, graph.cfg.compute_dtype, site=where)
+            except ValueError as e:
+                findings.append(Finding("SRV005", _sev(advisory), "serving",
+                                        str(e), site=name))
+    for names in tier_groups.values():
+        if len(names) > 1:
+            findings.append(Finding(
+                "SRV004", "warning", "serving",
+                f"tiers {names} resolve to the same policy group — they "
+                "share one jit'd step and one decode batch; merge them or "
+                "differentiate the specs", site=names[0]))
+    return findings
+
+
+def run_checkers(graph: SiteGraph, engine_cfg=None, *,
+                 serving: bool = True, advisory_serving: bool = False,
+                 vmem_budget_mib: float = 16.0, max_segments: int = 4,
+                 max_kernel_variants: int = 8
+                 ) -> "tuple[List[Finding], tuple]":
+    """Run every checker; returns (findings, categories_checked)."""
+    findings = []
+    findings += check_policy(graph)
+    findings += check_backend(graph)
+    findings += check_tiling(graph, vmem_budget_mib=vmem_budget_mib)
+    findings += check_recompile(graph, max_segments=max_segments,
+                                max_kernel_variants=max_kernel_variants)
+    findings += check_energy(graph)
+    categories = ["policy", "backend", "tiling", "recompile", "energy"]
+    if serving:
+        findings += check_serving(graph, engine_cfg,
+                                  advisory=advisory_serving)
+        categories.append("serving")
+    order = {s: i for i, s in enumerate(SEVERITIES)}
+    findings.sort(key=lambda f: (order[f.severity], f.category, f.code))
+    return findings, tuple(categories)
+
+
+def engine_config_finding(err: Exception) -> Finding:
+    """Wrap an EngineConfig construction error as a finding (SRV000)."""
+    return Finding("SRV000", "error", "serving", str(err))

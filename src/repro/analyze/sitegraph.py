@@ -1,0 +1,174 @@
+"""Abstract op-site graph materialization (no weights, no kernels).
+
+``trace_site_graph`` abstract-interprets a registered model config under an
+:class:`~repro.policy.ApproxPolicy` with ``jax.eval_shape``: the model's
+forward pass is traced with ``ShapeDtypeStruct`` stand-ins, every contraction
+resolves through the policy dispatcher as usual, and a site observer
+(:func:`repro.policy.observe_sites`) captures the full op-site graph — path,
+:class:`OpKind`, GEMM dims, operand dtype, resolved :class:`DaismConfig`,
+MAC count — without allocating a single weight or running a single kernel.
+
+The candidate policy may be *invalid* (e.g. a bf16-only backend on an fp32
+model): ``ArchConfig`` would reject it at construction, so the trace runs
+under a segmentation-preserving rewrite (every distinct config mapped
+injectively to a distinct always-legal exact config) and the real policy is
+re-resolved per site afterwards. Checkers then report legality findings
+instead of the construction crash.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional, Tuple, Union
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.config import Backend, DaismConfig, Variant
+from repro.models.common import ArchConfig
+from repro.policy import (ApproxPolicy, OpKind, energy_per_mult_pj,
+                          observe_sites, parse_policy)
+
+PolicyLike = Union[None, str, ApproxPolicy]
+
+
+@dataclasses.dataclass(frozen=True)
+class SiteRecord:
+    """One contraction site of the traced model under the analyzed policy."""
+
+    path: str
+    kind: OpKind
+    config: DaismConfig        # resolved under the *candidate* policy
+    dtype: str                 # operand dtype name at the site
+    dims: Tuple[int, int, int]  # (m, k, n) of one kernel invocation
+    macs: int                  # total multiplies (expert batching + repeat)
+    repeat: int                # ambient scan repeat (segment length)
+
+    @property
+    def energy_pj(self) -> float:
+        return self.macs * energy_per_mult_pj(self.config, self.dtype)
+
+    @property
+    def exact_energy_pj(self) -> float:
+        exact = DaismConfig(variant=Variant.EXACT, backend=Backend.EXACT)
+        return self.macs * energy_per_mult_pj(exact, self.dtype)
+
+
+@dataclasses.dataclass(frozen=True)
+class SiteGraph:
+    """The complete op-site graph of one (model config, policy) pair."""
+
+    cfg: ArchConfig
+    policy: ApproxPolicy
+    sites: Tuple[SiteRecord, ...]
+    # scanned-stack segmentation, e.g. {"segments": ((0, 22),)} — one entry
+    # per stack attribute of the traced model (enc/dec stacks separately)
+    segments: Dict[str, Tuple[Tuple[int, int], ...]]
+
+    def energy_uj(self) -> Tuple[float, float]:
+        """(policy_energy, all_exact_energy) in uJ over the whole graph."""
+        total = sum(s.energy_pj for s in self.sites)
+        base = sum(s.exact_energy_pj for s in self.sites)
+        return total / 1e6, base / 1e6
+
+    def total_macs(self) -> int:
+        return sum(s.macs for s in self.sites)
+
+    def paths(self) -> Tuple[str, ...]:
+        return tuple(s.path for s in self.sites)
+
+
+def _as_policy(cfg: ArchConfig, policy: PolicyLike) -> ApproxPolicy:
+    if policy is None:
+        return cfg.approx_policy
+    if isinstance(policy, str):
+        return parse_policy(policy)
+    return policy
+
+
+def _safe_rewrite(policy: ApproxPolicy) -> ApproxPolicy:
+    """Segmentation-preserving legality rewrite.
+
+    Maps every distinct config the policy can resolve to onto a distinct
+    exact config (disambiguated through ``k_chunk``, which nothing
+    validates against the compute dtype). The map is injective, so
+    ``plan_segments`` partitions layers identically under the rewrite —
+    the traced site paths (``layer_{lo}`` segment labels included) are
+    exactly the ones the real policy would produce — while the trace can
+    never trip ``validate_for_dtype`` on a deliberately broken candidate.
+    """
+    mapping: Dict[DaismConfig, DaismConfig] = {}
+
+    def safe(c: DaismConfig) -> DaismConfig:
+        if c not in mapping:
+            mapping[c] = DaismConfig(variant=Variant.EXACT,
+                                     backend=Backend.EXACT,
+                                     k_chunk=10_000 + len(mapping))
+        return mapping[c]
+
+    rules = tuple(dataclasses.replace(r, config=safe(r.config))
+                  for r in policy.rules)
+    return ApproxPolicy(rules=rules, default=safe(policy.default),
+                        name=policy.name)
+
+
+def _input_specs(cfg: ArchConfig, *, batch: int, seq: int):
+    """Small ShapeDtypeStruct inputs covering every family's forward."""
+    if cfg.family == "cnn":
+        side, chan = ((28, 1) if "lenet" in cfg.name else (32, 3))
+        return {"images": jax.ShapeDtypeStruct((batch, side, side, chan),
+                                               jnp.float32)}
+    i32 = jnp.int32
+    dt = jnp.dtype(cfg.compute_dtype)
+    specs = {"tokens": jax.ShapeDtypeStruct((batch, seq), i32)}
+    if cfg.family == "vlm":
+        specs["image_embeds"] = jax.ShapeDtypeStruct(
+            (batch, cfg.n_image_tokens, cfg.d_model), dt)
+    if cfg.family == "audio":
+        specs["frames"] = jax.ShapeDtypeStruct(
+            (batch, cfg.enc_frames, cfg.d_model), dt)
+    return specs
+
+
+def _collect_segments(model) -> Dict[str, Tuple[Tuple[int, int], ...]]:
+    out = {}
+    for attr in ("segments", "enc_segments", "dec_segments"):
+        segs = getattr(model, attr, None)
+        if segs:
+            out[attr] = tuple(tuple(s) for s in segs)
+    return out
+
+
+def trace_site_graph(cfg: ArchConfig, policy: PolicyLike = None, *,
+                     batch: int = 1, seq: int = 8) -> SiteGraph:
+    """Materialize the op-site graph of ``cfg`` under ``policy``.
+
+    Pure shape-level work: ``model.init(abstract=True)`` +
+    ``jax.eval_shape`` over the forward pass. ``policy`` may be ``None``
+    (the config's own effective policy), a spec string, or an
+    ``ApproxPolicy`` — including ones ``ArchConfig`` itself would reject.
+    """
+    from repro.models.registry import build_model
+
+    candidate = _as_policy(cfg, policy)
+    trace_cfg = dataclasses.replace(
+        cfg, policy=_safe_rewrite(candidate),
+        daism=DaismConfig(variant=Variant.EXACT, backend=Backend.EXACT))
+    model = build_model(trace_cfg)
+    params, _ = model.init(jax.random.PRNGKey(0), abstract=True)
+
+    events = []
+    with observe_sites(events.append):
+        jax.eval_shape(model.forward, params,
+                       _input_specs(cfg, batch=batch, seq=seq))
+
+    seen = {}
+    for ev in events:
+        # candidate and rewritten policy share rule patterns/order, so
+        # re-resolving the candidate picks the same winning rule per site
+        seen[(ev.path, ev.kind)] = SiteRecord(
+            path=ev.path, kind=ev.kind,
+            config=candidate.resolve(ev.path, ev.kind),
+            dtype=ev.dtype, dims=ev.dims, macs=ev.macs, repeat=ev.repeat)
+    sites = tuple(seen[k] for k in sorted(seen, key=lambda k: k[0]))
+    return SiteGraph(cfg=cfg, policy=candidate, sites=sites,
+                     segments=_collect_segments(model))

@@ -141,9 +141,6 @@ def approx_mul_uint_planes(
             even = bitops.planes_truncate_top(even, n)
             odd = bitops.planes_truncate_top(odd, n)
         out = bitops.planes_add(even, odd, n)
-        if variant.truncated:
-            out = bitops.planes_truncate_top(out, n)
-        return out
     elif base in (Variant.PC2, Variant.PC3):
         k = 2 if base is Variant.PC2 else 3
         b_msb = jnp.where(msb_always_set, _bit(b, n - 1) | 1, _bit(b, n - 1))

@@ -127,5 +127,4 @@ def flash_attention_bhsd(q, k, v, *, causal=True, interpret=True,
         vt = jnp.pad(vt, ((0, 0), (0, pk), (0, 0)))
     out = flash_attention(qt, kt, vt, causal=causal, block_q=block_q,
                           block_k=block_k, interpret=interpret)
-    out = out[:, :sq].reshape(b, h, sq, d).transpose(0, 2, 1, 3)
-    return out
+    return out[:, :sq].reshape(b, h, sq, d).transpose(0, 2, 1, 3)

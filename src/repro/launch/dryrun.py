@@ -23,6 +23,7 @@ Usage:
 """
 
 import argparse
+import contextlib
 import dataclasses
 import json
 import time
@@ -126,7 +127,7 @@ def lower_cell(cfg, mesh, rules, shape_name: str, *, probe_cat=None,
     params = _specs_with_shardings(art.param_shapes, art.param_shardings)
 
     ctx = (use_unroll(**{probe_cat: probe_k}) if probe_cat
-           else _nullcontext())
+           else contextlib.nullcontext())
     with ctx:
         if kind == "train":
             opt = _specs_with_shardings(art.opt_shapes, art.opt_shardings)
@@ -148,13 +149,6 @@ def lower_cell(cfg, mesh, rules, shape_name: str, *, probe_cat=None,
                 art.decode_step, params, toks, cache, extra)
     return lowered, flops_thunk, kind
 
-
-class _nullcontext:
-    def __enter__(self):
-        return None
-
-    def __exit__(self, *a):
-        return False
 
 
 def run_cell(arch: str, shape_name: str, mesh_kind: str, *,

@@ -1,0 +1,95 @@
+"""daism-lint CLI: static preflight for (model, policy, engine) triples.
+
+    PYTHONPATH=src python -m repro.launch.lint \
+        --model tinyllama_1_1b --policy "*/attn/*=exact,*=pc3_tr"
+
+Abstract-interprets the model under the policy with ``jax.eval_shape`` (no
+weights allocated, no kernels run), prints the op-site table, and runs the
+full checker suite — policy reachability, backend legality, Pallas tiling,
+recompile hazards, energy summary, serving config. Exits 1 on any
+error-severity finding, so it gates CI and the train/serve launchers.
+
+``--all`` lints every registered config (the CI ``lint-policies`` job);
+serving findings are advisory there since no deployment is being launched.
+"""
+import argparse
+import sys
+
+
+def _engine_cfg(args):
+    """Build the EngineConfig under lint (None = construction error
+    already reported by the caller)."""
+    from repro.serve.engine import EngineConfig, parse_tiers
+
+    tiers = parse_tiers(args.tiers) if args.tiers else ()
+    return EngineConfig(num_slots=args.slots, max_seq=args.max_seq,
+                        block_size=args.block_size, num_blocks=args.blocks,
+                        prefill_chunk=args.prefill_chunk, tiers=tiers)
+
+
+def _lint_one(name, args, *, advisory):
+    from repro.analyze import (AnalysisReport, analyze, engine_config_finding,
+                               run_checkers, trace_site_graph)
+    from repro.configs import get_config
+
+    cfg = get_config(name)
+    try:
+        engine_cfg = _engine_cfg(args)
+    except ValueError as e:
+        # the engine config itself is broken: still trace + run the other
+        # checkers, with the construction error as an SRV000 finding
+        graph = trace_site_graph(cfg, args.policy or None, seq=args.seq)
+        findings, categories = run_checkers(graph, None, serving=False)
+        findings.insert(0, engine_config_finding(e))
+        return AnalysisReport(graph=graph, findings=findings,
+                              categories=(*categories, "serving"))
+    return analyze(cfg, args.policy or None, engine_cfg=engine_cfg,
+                   advisory_serving=advisory, seq=args.seq)
+
+
+def main(argv=None):
+    p = argparse.ArgumentParser(prog="daism-lint", description=__doc__)
+    p.add_argument("--model", "--arch", dest="model", default="",
+                   help="registered config name (see repro.configs)")
+    p.add_argument("--all", action="store_true",
+                   help="lint every registered config (serving advisory)")
+    p.add_argument("--policy", default="",
+                   help="candidate policy spec, e.g. '*/attn/*=exact,"
+                        "*=pc3_tr' (default: the config's own policy)")
+    p.add_argument("--tiers", default="",
+                   help="serving tier specs 'name=spec;...' to lint against "
+                        "the model (repro.serve.parse_tiers form)")
+    p.add_argument("--format", choices=("text", "json"), default="text")
+    p.add_argument("--no-sites", action="store_true",
+                   help="omit the per-site table from text output")
+    p.add_argument("--seq", type=int, default=8,
+                   help="abstract trace sequence length")
+    p.add_argument("--slots", type=int, default=4)
+    p.add_argument("--max-seq", type=int, default=128)
+    p.add_argument("--block-size", type=int, default=16)
+    p.add_argument("--blocks", type=int, default=0)
+    p.add_argument("--prefill-chunk", type=int, default=16)
+    args = p.parse_args(argv)
+    if bool(args.model) == args.all:
+        p.error("exactly one of --model or --all is required")
+
+    from repro.analyze import format_json, format_text
+    from repro.configs import ARCH_IDS, PAPER_IDS
+
+    names = (ARCH_IDS + PAPER_IDS) if args.all else (args.model,)
+    worst = 0
+    for name in names:
+        report = _lint_one(name, args, advisory=args.all)
+        if args.format == "json":
+            print(format_json(report))
+        else:
+            print(format_text(report, sites=not (args.no_sites or args.all)))
+        worst = max(worst, report.exit_code)
+    if args.all:
+        print(f"daism-lint: {len(names)} configs linted, "
+              f"{'FAIL' if worst else 'ok'}")
+    return sys.exit(worst) if worst else 0
+
+
+if __name__ == "__main__":
+    main()

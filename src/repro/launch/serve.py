@@ -70,6 +70,8 @@ def main(argv=None):
                    help="daism backend for approximate variants")
     p.add_argument("--seed", type=int, default=0)
     p.add_argument("--devices", type=int, default=0)
+    p.add_argument("--no-preflight", action="store_true",
+                   help="skip the daism-lint static preflight")
     args = p.parse_args(argv)
     if args.devices:
         os.environ["XLA_FLAGS"] = (
@@ -94,14 +96,22 @@ def main(argv=None):
                       stacklevel=1)
         cfg = dataclasses.replace(cfg,
                                   daism=build_daism(args.variant, args.backend))
+    tiers = parse_tiers(args.tiers) if args.tiers else ()
+    engine_cfg = EngineConfig(
+        num_slots=args.slots, max_seq=args.max_seq,
+        block_size=args.block_size, num_blocks=args.blocks,
+        prefill_chunk=args.prefill_chunk, tiers=tiers)
+    if not args.no_preflight:
+        # static lint of the full (model, policy, engine) triple before the
+        # (expensive) params init: bad tiers, window/paged conflicts and
+        # undersized pools abort here (launch/lint.py standalone)
+        from repro.analyze import preflight
+
+        preflight(cfg, engine_cfg=engine_cfg, label=f"serve {args.arch}")
     model = build_model(cfg)
     params, _ = model.init(jax.random.PRNGKey(0))
 
-    tiers = parse_tiers(args.tiers) if args.tiers else ()
-    engine = ServeEngine(model, params, EngineConfig(
-        num_slots=args.slots, max_seq=args.max_seq,
-        block_size=args.block_size, num_blocks=args.blocks,
-        prefill_chunk=args.prefill_chunk, tiers=tiers))
+    engine = ServeEngine(model, params, engine_cfg)
     tier_names = [name for name, _ in tiers]
     if args.poisson > 0:
         requests = poisson_requests(

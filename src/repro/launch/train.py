@@ -36,6 +36,8 @@ def main(argv=None):
     p.add_argument("--policy", default="",
                    help="per-site approximation policy spec, e.g. "
                         "'*/layer_0/*=exact,@lm_head=exact,*=pc3_tr'")
+    p.add_argument("--no-preflight", action="store_true",
+                   help="skip the daism-lint static preflight")
     args = p.parse_args(argv)
 
     if args.devices:
@@ -66,6 +68,13 @@ def main(argv=None):
         cfg = dataclasses.replace(
             cfg, daism=DaismConfig(variant=Variant(args.daism),
                                    backend=Backend.JNP))
+    if not args.no_preflight:
+        # static lint of the (model, policy) pair before any compilation:
+        # zero-match rules, illegal backends, scan shatter all fail here
+        # in O(seconds) instead of mid-trace (launch/lint.py standalone)
+        from repro.analyze import preflight
+
+        preflight(cfg, serving=False, label=f"train {args.arch}")
     if args.mesh == "auto":
         mesh = best_effort_mesh(model_parallel=1 if jax.device_count() == 1
                                 else 2)

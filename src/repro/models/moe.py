@@ -95,9 +95,8 @@ def _local_dispatch_compute(x2d, ids, probs, w_in, w_gate, w_out, e0: int,
     y = jnp.pad(y, ((0, 0), (0, 1), (0, 0)))         # restore trash row
     out_slots = y[le_safe, pos_safe]                 # (T*k, d)
     out_slots = jnp.where(keep[:, None], out_slots, 0)
-    out = (out_slots.reshape(t, cfg.topk, d)
-           * probs.astype(out_slots.dtype)[..., None]).sum(axis=1)
-    return out
+    return (out_slots.reshape(t, cfg.topk, d)
+            * probs.astype(out_slots.dtype)[..., None]).sum(axis=1)
 
 
 def moe_ffn(ctx: Ctx, x: jnp.ndarray, cfg: ArchConfig

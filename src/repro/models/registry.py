@@ -25,7 +25,8 @@ def build_model(cfg: ArchConfig):
     try:
         cls = _FAMILIES[cfg.family]
     except KeyError:
-        raise ValueError(f"unknown family {cfg.family!r} for arch {cfg.name}")
+        raise ValueError(
+            f"unknown family {cfg.family!r} for arch {cfg.name}") from None
     return cls(cfg)
 
 

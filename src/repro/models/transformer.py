@@ -334,6 +334,8 @@ class DecoderLM:
         """
         cfg = self.cfg
         if cfg.window:
+            # backstop for direct callers; the serving engine rejects this
+            # combination earlier via EngineConfig.validate_for_model
             raise ValueError(
                 f"paged KV cache needs window=0 (got window={cfg.window}: "
                 "ring buffers roll in place, pages are freed whole)")

@@ -105,7 +105,7 @@ class Sharder:
     def _axes_for(self, name: Optional[str]) -> Tuple[str, ...]:
         if name is None:
             return ()
-        rule = self.rules.get(name, None)
+        rule = self.rules.get(name)
         if rule is None:
             return ()
         if isinstance(rule, str):

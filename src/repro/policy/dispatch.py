@@ -17,8 +17,10 @@ This is the single injection point between models and the DAISM GEMM:
 """
 from __future__ import annotations
 
+import contextlib
+import dataclasses
 import functools
-from typing import Callable, Dict, Optional, Tuple
+from typing import Callable, Dict, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -95,6 +97,48 @@ def _record(policy: ApproxPolicy, path: str, kind: OpKind, cfg: DaismConfig,
         cfg, jnp.dtype(dtype).name, int(macs))
 
 
+# ---------------------------------------------------------------------------
+# Site observers — the static analyzer's trace hook
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class SiteEvent:
+    """One resolved contraction site, as seen at trace time.
+
+    ``dims = (m, k, n)`` are the dims of a single kernel invocation (leading
+    batch axes folded into ``m``; for batched expert GEMMs the per-expert
+    dims). ``macs`` is the total multiply count of the site including any
+    expert batching and the ambient scan ``repeat``.
+    """
+
+    path: str
+    kind: OpKind
+    config: DaismConfig
+    dtype: str
+    dims: Tuple[int, int, int]
+    macs: int
+    repeat: int
+
+
+_OBSERVERS: List[Callable[[SiteEvent], None]] = []
+
+
+@contextlib.contextmanager
+def observe_sites(callback: Callable[[SiteEvent], None]):
+    """Deliver a :class:`SiteEvent` to ``callback`` for every site resolved
+    (with ``record=True``) inside the with-block.
+
+    This is how ``repro.analyze`` materializes the op-site graph from a
+    ``jax.eval_shape`` trace without touching the per-policy resolution log.
+    """
+    _OBSERVERS.append(callback)
+    try:
+        yield
+    finally:
+        _OBSERVERS.remove(callback)
+
+
 def _energy_per_mult_pj(cfg: DaismConfig, dtype_name: str) -> float:
     """Estimated pJ per multiplication (core/energy model, Eq 4-6)."""
     from repro.core import energy as E
@@ -106,6 +150,11 @@ def _energy_per_mult_pj(cfg: DaismConfig, dtype_name: str) -> float:
         return E.total(E.eyeriss_energy_per_mult(
             dtype_name, truncated=False)) + exp
     return E.total(E.daism_energy_per_mult(cfg.variant, dtype_name)) + exp
+
+
+def energy_per_mult_pj(cfg: DaismConfig, dtype_name: str) -> float:
+    """Public per-mult energy estimate (the analyzer's site table uses it)."""
+    return _energy_per_mult_pj(cfg, dtype_name)
 
 
 def site_report(policy: ApproxPolicy) -> str:
@@ -189,7 +238,8 @@ def kernel_stats() -> Dict[str, int]:
 
 
 def resolve_site(policy: ApproxPolicy, name: str, kind: OpKind, dtype,
-                 *, record: bool = True, macs: int = 0) -> DaismConfig:
+                 *, record: bool = True, macs: int = 0,
+                 dims: Tuple[int, int, int] = (0, 0, 0)) -> DaismConfig:
     """Resolve + validate the config for the site named ``name`` under the
     ambient site scope. Returns the (frozen) resolved DaismConfig."""
     path = current_path(name)
@@ -197,7 +247,12 @@ def resolve_site(policy: ApproxPolicy, name: str, kind: OpKind, dtype,
     cfg = policy.resolve(path, kind)
     validate_for_dtype(cfg, dtype, site=path)
     if record:
-        _record(policy, path, kind, cfg, dtype, macs * current_repeat())
+        repeat = current_repeat()
+        _record(policy, path, kind, cfg, dtype, macs * repeat)
+        for cb in _OBSERVERS:
+            cb(SiteEvent(path=path, kind=kind, config=cfg,
+                         dtype=jnp.dtype(dtype).name, dims=dims,
+                         macs=macs * repeat, repeat=repeat))
     return cfg
 
 
@@ -211,8 +266,10 @@ def policy_dot(policy: ApproxPolicy, x, w, *, name: str,
     """
     k = x.shape[-1]
     n = w.shape[-1]
-    macs = int(np.prod(x.shape[:-1], dtype=np.int64)) * int(k) * int(n)
-    cfg = resolve_site(policy, name, kind, x.dtype, record=record, macs=macs)
+    m = int(np.prod(x.shape[:-1], dtype=np.int64))
+    macs = m * int(k) * int(n)
+    cfg = resolve_site(policy, name, kind, x.dtype, record=record, macs=macs,
+                       dims=(m, int(k), int(n)))
     if cfg.exact:
         return jnp.dot(x, w.astype(x.dtype))
     out = matmul_kernel(cfg)(x.reshape(-1, k), w)
@@ -240,7 +297,7 @@ def policy_conv2d(policy: ApproxPolicy, x, kernel, *, name: str,
         ho, wo = -(-(h - kh + 1) // stride), -(-(wdim - kw + 1) // stride)
     macs = nb * ho * wo * kh * kw * cin * cout
     cfg = resolve_site(policy, name, OpKind.CONV, x.dtype, record=record,
-                       macs=macs)
+                       macs=macs, dims=(nb * ho * wo, kh * kw * cin, cout))
     return conv2d_im2col(x, kernel.astype(x.dtype), cfg, stride=stride,
                          padding=padding).astype(x.dtype)
 
@@ -252,7 +309,7 @@ def policy_expert_matmul(policy: ApproxPolicy, x, w, *, name: str,
     f = w.shape[-1]
     macs = e * c * d * f
     cfg = resolve_site(policy, name, OpKind.MOE_EXPERT, x.dtype,
-                       record=record, macs=macs)
+                       record=record, macs=macs, dims=(c, d, f))
     if cfg.exact:
         return jnp.einsum("ecd,edf->ecf", x, w.astype(x.dtype))
     kern = matmul_kernel(cfg)

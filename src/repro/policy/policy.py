@@ -176,6 +176,10 @@ def parse_policy(spec: str, default: DaismConfig = EXACT,
     Entries become rules in the order given (first match wins), so a ``*=``
     catch-all shadows everything after it; a ``default=...`` entry sets the
     fallback for sites no rule matches (``exact`` unless overridden).
+
+    Two rules with the same glob are rejected outright (the second can never
+    fire); non-identical overlaps are the linter's shadowing check
+    (``repro.analyze``), not a parse error.
     """
     rules = []
     for item in spec.split(","):
@@ -191,6 +195,14 @@ def parse_policy(spec: str, default: DaismConfig = EXACT,
         if pattern == "default":
             default = cfg
         else:
+            for j, prev in enumerate(rules):
+                if prev.pattern == pattern and prev.kind is None:
+                    raise ValueError(
+                        f"duplicate policy rule for pattern {pattern!r}: "
+                        f"rules {j} ({prev.pattern}="
+                        f"{describe_config(prev.config)}) and {len(rules)} "
+                        f"({pattern}={describe_config(cfg)}) target the same "
+                        "glob — first match wins, the second can never fire")
             rules.append(Rule(pattern, cfg))
     return ApproxPolicy(rules=tuple(rules), default=default,
                         name=name or spec)

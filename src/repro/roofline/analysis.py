@@ -68,7 +68,7 @@ def _group_size(line: str, default: int) -> int:
         return int(m.group(2))
     m = _GROUPS_RE.search(line)
     if m:
-        first = m.group(1).split("}")[0].strip("{ ")
+        first = m.group(1).split("}")[0].replace("{", " ").strip()
         if first:
             return len(first.split(","))
     return default

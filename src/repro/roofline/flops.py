@@ -108,9 +108,8 @@ def jaxpr_flops(jaxpr, consts_mult: float = 1.0) -> float:
             total += jaxpr_flops(eqn.params["fun_jaxpr"].jaxpr)
         elif prim in ("reduce_sum", "reduce_max", "reduce_min", "reduce_prod",
                       "reduce_and", "reduce_or", "argmax", "argmin",
-                      "cumsum", "cumlogsumexp", "cummax", "cumprod"):
-            total += _size(eqn.invars[0].aval)
-        elif prim == "reduce_window_sum" or prim == "reduce_window_max":
+                      "cumsum", "cumlogsumexp", "cummax", "cumprod",
+                      "reduce_window_sum", "reduce_window_max"):
             total += _size(eqn.invars[0].aval)
         elif prim in ("sort", "top_k"):
             n = _size(eqn.invars[0].aval)

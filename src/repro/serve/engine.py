@@ -134,6 +134,21 @@ class EngineConfig:
                     f"EngineConfig.tiers entries must be (name, spec) "
                     f"string pairs (got {(name, spec)!r})")
 
+    def validate_for_model(self, model_cfg) -> None:
+        """Model/engine compatibility, checked at engine construction with
+        the field named — not three layers deep in paged-cache setup.
+
+        A windowed (ring-buffer) cache can never be paged: the ring rolls
+        in place while the pool frees whole pages at retirement.
+        """
+        window = getattr(model_cfg, "window", 0)
+        if window:
+            raise ValueError(
+                f"EngineConfig: ArchConfig.window={window} (on "
+                f"{getattr(model_cfg, 'name', '?')!r}) is incompatible with "
+                "the paged KV cache — ring buffers roll in place, pages are "
+                "freed whole; serve with window=0 (e.g. cfg.smoke(window=0))")
+
     @property
     def blocks(self) -> int:
         """Physical pool pages (resolves the ``num_blocks=0`` default)."""
@@ -247,6 +262,8 @@ class ServeEngine:
             raise TypeError(
                 f"{type(model).__name__} has no paged_step(); the serving "
                 "engine requires the DecoderLM paged-cache API")
+        if hasattr(model, "cfg"):
+            cfg.validate_for_model(model.cfg)
         self.model = model
         self.params = params
         self.cfg = cfg

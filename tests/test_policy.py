@@ -373,3 +373,51 @@ def test_energy_estimate_orders_policies():
         savings.append(1 - used / exact)
         assert "estimated multiply energy" in P.site_report(pol)
     assert savings[0] > savings[1]  # uniform approx saves more than mixed
+
+
+def test_parse_policy_rejects_duplicate_patterns():
+    with pytest.raises(ValueError, match=r"duplicate policy rule .* "
+                                         r"rules 0 .* and 1 "):
+        P.parse_policy("*/attn/*=exact,*/attn/*=pc3_tr,*=fla")
+
+
+def test_parse_policy_duplicate_default_key_still_allowed():
+    # "default" is a key, not a rule: last assignment wins, no dup error
+    pol = P.parse_policy("*/attn/*=exact,default=pc3_tr")
+    assert pol.default is not None
+
+
+# ---------------------------------------------------------------------------
+# Pallas interpret auto-selection
+# ---------------------------------------------------------------------------
+
+def test_auto_interpret_explicit_setting_wins(monkeypatch):
+    # explicit interpret beats the platform, both ways
+    monkeypatch.setattr(jax, "default_backend", lambda: "tpu")
+    assert P.auto_interpret(
+        dataclasses.replace(PC3_TR, interpret=True)) is True
+    monkeypatch.setattr(jax, "default_backend", lambda: "cpu")
+    assert P.auto_interpret(
+        dataclasses.replace(PC3_TR, interpret=False)) is False
+
+
+def test_auto_interpret_none_selects_by_platform(monkeypatch):
+    assert PC3_TR.interpret is None
+    monkeypatch.setattr(jax, "default_backend", lambda: "cpu")
+    assert P.auto_interpret(PC3_TR) is True
+    monkeypatch.setattr(jax, "default_backend", lambda: "tpu")
+    assert P.auto_interpret(PC3_TR) is False
+
+
+def test_interpret_mode_keys_kernel_cache():
+    """interpret is part of DaismConfig, so the jitted-kernel lru_cache
+    distinguishes auto (None) from forced modes — no cross-contamination
+    when the same variant runs interpreted and compiled in one process."""
+    base = DaismConfig(variant=Variant.PC2, backend=Backend.JNP, k_chunk=23)
+    forced = dataclasses.replace(base, interpret=True)
+    k_auto = P.matmul_kernel(base)
+    k_forced = P.matmul_kernel(forced)
+    assert k_auto is not k_forced
+    assert P.matmul_kernel(dataclasses.replace(base, interpret=True)) \
+        is k_forced
+    assert P.matmul_kernel(dataclasses.replace(base)) is k_auto

@@ -3,6 +3,8 @@ row reuse isolation, and token-identity of the paged (block-table,
 chunked-prefill) engine vs. the single-request decode_step path —
 including under mixed per-request approximation policies and prefix-cache
 block reuse."""
+import dataclasses
+
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -52,7 +54,7 @@ def _reference_generate(model, params, prompt, max_new):
 
 def test_scheduler_admits_and_retires():
     sched = Scheduler(num_slots=2)
-    for i in range(3):
+    for _ in range(3):
         sched.submit(Request(prompt=[1, 2], max_new_tokens=4))
     admitted = sched.admit(step=0)
     assert [s.slot for s in admitted] == [0, 1]
@@ -348,3 +350,14 @@ def test_watchdog_skips_warmup_and_counts_stragglers():
     assert dog.observe(50.0)       # straggler vs ~1.1 EWMA
     assert dog.stragglers == 1
     assert dog.ewma < 30.0
+
+
+def test_engine_config_rejects_windowed_model(served):
+    """Windowed (ring-buffer) caches cannot be paged; the engine rejects
+    the combination at construction with the offending field named."""
+    cfg, model, params = served
+    windowed = dataclasses.replace(cfg, window=16)
+    with pytest.raises(ValueError, match=r"ArchConfig\.window=16 .* paged"):
+        EngineConfig().validate_for_model(windowed)
+    with pytest.raises(ValueError, match=r"ArchConfig\.window"):
+        ServeEngine(build_model(windowed), params, EngineConfig(num_slots=1))

@@ -47,7 +47,7 @@ def test_training_reduces_loss():
     step = _make_step(model, AdamWConfig(lr=3e-3))
     gen = _batches(cfg)
     losses = []
-    for i in range(30):
+    for _ in range(30):
         b = next(gen)
         params, opt, m = step(params, opt,
                               {k: jnp.asarray(v) for k, v in b.items()})
