@@ -19,7 +19,18 @@ from repro.core import Backend, DaismConfig, Variant, daism_matmul
 
 VPU_INT32_OPS = 4e12     # ~per chip
 MXU_FLOPS = 197e12
-DAISM_OPS_PER_MAC = 30   # decompose + 8x(select/or/shift) + normalize + compose
+# int32 VPU ops per MAC of the fused PC3 shift-plane kernel
+# (kernels/approx_product.approx_matmul_tile). Operand decomposition is
+# hoisted out of the K sweep (amortized over the opposite tile edge, ~0 per
+# MAC), and the K-sum now folds into the plane loop, so the count is:
+#   pre-computed 3-bit head line: mul + shift               = 2
+#   5 remaining planes x (select + shift + or)              = 15
+#   truncation column mask                                  = 1
+#   f32 re-composition (normalize shift/select, exponent
+#   add + flush/saturate selects, sign/bit assembly)        = 6
+DAISM_OPS_PER_MAC = 24
+# pre-fusion count, kept for the claim trajectory in README/CHANGES:
+# decompose (4) + 8x(select/or/shift) + normalize + compose = 30
 
 
 def _time(fn, *args, iters=3):

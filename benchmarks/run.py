@@ -16,7 +16,7 @@ import sys
 import time
 
 _MODULES = ("error_distance", "energy", "arch_cycles", "gemm_bench",
-            "accuracy", "policy_sweep", "serve_bench")
+            "attn_bench", "accuracy", "policy_sweep", "serve_bench")
 
 _REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 

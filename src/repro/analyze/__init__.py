@@ -19,17 +19,19 @@ from __future__ import annotations
 
 from typing import Optional
 
-from .checkers import (CATEGORIES, Finding, check_backend, check_energy,
-                       check_policy, check_recompile, check_serving,
-                       check_tiling, engine_config_finding, run_checkers)
+from .checkers import (CATEGORIES, Finding, check_attention, check_backend,
+                       check_energy, check_policy, check_recompile,
+                       check_serving, check_tiling, engine_config_finding,
+                       run_checkers)
 from .report import AnalysisReport, format_json, format_text
 from .sitegraph import SiteGraph, SiteRecord, trace_site_graph
 
 __all__ = [
     "analyze", "preflight", "AnalysisReport", "Finding",
     "SiteGraph", "SiteRecord", "trace_site_graph", "run_checkers",
-    "check_policy", "check_backend", "check_tiling", "check_recompile",
-    "check_energy", "check_serving", "engine_config_finding",
+    "check_policy", "check_backend", "check_tiling", "check_attention",
+    "check_recompile", "check_energy", "check_serving",
+    "engine_config_finding",
     "format_text", "format_json", "CATEGORIES",
 ]
 

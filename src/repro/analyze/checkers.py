@@ -14,6 +14,8 @@ BCK001   error     backend illegal for the site's operand dtype
 TIL001   warning   GEMM dims not divisible by Pallas block sizes
 TIL002   warning   per-kernel VMEM footprint exceeds the budget
 TIL003   info      Pallas sites auto-select interpret mode here
+TIL004   warning   flash-attention tiles pad the sequence / misalign lanes
+TIL005   error     flash-attention DAISM variant on a non-bf16 model
 RCP001   warning   policy shatters a scanned stack into many segments
 RCP002   warning   dispatcher cache would hold many kernel variants
 ENE001   info      estimated multiply-energy summary
@@ -37,8 +39,8 @@ from typing import List
 import jax
 
 from repro.core.config import Backend
-from repro.policy import (auto_interpret, describe_config, parse_policy,
-                          validate_for_dtype)
+from repro.policy import (OpKind, auto_interpret, describe_config,
+                          parse_policy, validate_for_dtype)
 
 from .sitegraph import SiteGraph
 
@@ -130,10 +132,14 @@ def check_backend(graph: SiteGraph) -> List[Finding]:
 
 
 # VMEM bytes per kernel grid step (see kernels/daism_matmul.py docstring):
-# ~3 live (bm, bk, bn) f32 temporaries + the resident f32 out tile, plus the
-# streamed bf16 a/w tiles.
+# the fused shift-plane sweep keeps ~3 live (bm, K_FUSE, bn) slab temporaries
+# (K-independent) + the resident f32 out tile, plus the streamed bf16 a/w
+# tiles — block_k only enters through the streamed tiles now.
 def _vmem_bytes(bm: int, bk: int, bn: int) -> int:
-    return (3 * bm * bk * bn + bm * bn) * 4 + (bm * bk + bk * bn) * 2
+    from repro.kernels.approx_product import K_FUSE
+
+    return ((3 * bm * min(bk, K_FUSE) * bn + bm * bn) * 4
+            + (bm * bk + bk * bn) * 2)
 
 
 def check_tiling(graph: SiteGraph, *,
@@ -178,6 +184,48 @@ def check_tiling(graph: SiteGraph, *,
             "— orders of magnitude slower than compiled; use backend 'jnp' "
             "for CPU runs",
             site=interp_sites[0]))
+    return findings
+
+
+def check_attention(graph: SiteGraph) -> List[Finding]:
+    """Flash-attention dispatch legality (TIL family, ATTN_QK sites only).
+
+    TIL004: the flash kernel tiles (block_q, block_k) = (128, 128) over the
+    sequence and keeps the head dim whole in VMEM lanes — ragged sequence
+    lengths pad (masked but wasted compute), and a head dim off the 128-lane
+    width underutilizes the VPU. TIL005: an approximate variant through the
+    flash kernel is bfloat16-only (mirrors the ``resolve_site`` error as a
+    pre-trace finding).
+    """
+    from repro.kernels.flash_attention import DEFAULT_BLOCK_K, DEFAULT_BLOCK_Q
+
+    findings = []
+    for s in graph.sites:
+        if s.kind is not OpKind.ATTN_QK or s.config.attn_kernel != "flash":
+            continue
+        sq, d, skv = s.dims
+        if not s.config.exact and s.dtype != "bfloat16":
+            findings.append(Finding(
+                "TIL005", "error", "tiling",
+                f"flash attention with DAISM variant "
+                f"'{s.config.variant.value}' is bfloat16-only but the site "
+                f"computes in {s.dtype}; run the site exact (keep ':flash', "
+                "drop the variant) or switch the compute dtype",
+                site=s.path))
+        ragged = [f"{ax}: {dim} -> {-(-dim // blk) * blk}"
+                  for ax, dim, blk in (("sq", sq, DEFAULT_BLOCK_Q),
+                                       ("skv", skv, DEFAULT_BLOCK_K))
+                  if dim % blk]
+        if d % 128:
+            ragged.append(f"head_dim {d} off the 128-lane width")
+        if ragged:
+            findings.append(Finding(
+                "TIL004", "warning", "tiling",
+                f"flash-attention tiles (bq={DEFAULT_BLOCK_Q}, "
+                f"bk={DEFAULT_BLOCK_K}) pad this site: "
+                f"{', '.join(ragged)} — masked but wasted compute on every "
+                "padded tile",
+                site=s.path))
     return findings
 
 
@@ -310,6 +358,7 @@ def run_checkers(graph: SiteGraph, engine_cfg=None, *,
     findings += check_policy(graph)
     findings += check_backend(graph)
     findings += check_tiling(graph, vmem_budget_mib=vmem_budget_mib)
+    findings += check_attention(graph)
     findings += check_recompile(graph, max_segments=max_segments,
                                 max_kernel_variants=max_kernel_variants)
     findings += check_energy(graph)

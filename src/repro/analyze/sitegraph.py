@@ -95,6 +95,13 @@ def _safe_rewrite(policy: ApproxPolicy) -> ApproxPolicy:
     the traced site paths (``layer_{lo}`` segment labels included) are
     exactly the ones the real policy would produce — while the trace can
     never trip ``validate_for_dtype`` on a deliberately broken candidate.
+
+    ``attn_kernel`` is carried over: segmentation fingerprints collapse
+    non-flash ATTN_QK resolutions to one effective EXACT config
+    (``policy.layer_signature``), so dropping the flag here would merge
+    layer runs the real policy keeps apart. Exact flash configs are legal
+    on every dtype, so carrying the flag cannot re-introduce a validation
+    crash.
     """
     mapping: Dict[DaismConfig, DaismConfig] = {}
 
@@ -102,7 +109,8 @@ def _safe_rewrite(policy: ApproxPolicy) -> ApproxPolicy:
         if c not in mapping:
             mapping[c] = DaismConfig(variant=Variant.EXACT,
                                      backend=Backend.EXACT,
-                                     k_chunk=10_000 + len(mapping))
+                                     k_chunk=10_000 + len(mapping),
+                                     attn_kernel=c.attn_kernel)
         return mapping[c]
 
     rules = tuple(dataclasses.replace(r, config=safe(r.config))
@@ -161,13 +169,19 @@ def trace_site_graph(cfg: ArchConfig, policy: PolicyLike = None, *,
         jax.eval_shape(model.forward, params,
                        _input_specs(cfg, batch=batch, seq=seq))
 
+    from repro.policy import effective_attn_config
+
     seen = {}
     for ev in events:
         # candidate and rewritten policy share rule patterns/order, so
         # re-resolving the candidate picks the same winning rule per site
+        resolved = candidate.resolve(ev.path, ev.kind)
+        if ev.kind is OpKind.ATTN_QK:
+            # the graph records what the site *runs*: attention numerics
+            # apply only under ':flash' dispatch, else effectively EXACT
+            resolved = effective_attn_config(resolved)
         seen[(ev.path, ev.kind)] = SiteRecord(
-            path=ev.path, kind=ev.kind,
-            config=candidate.resolve(ev.path, ev.kind),
+            path=ev.path, kind=ev.kind, config=resolved,
             dtype=ev.dtype, dims=ev.dims, macs=ev.macs, repeat=ev.repeat)
     sites = tuple(seen[k] for k in sorted(seen, key=lambda k: k[0]))
     return SiteGraph(cfg=cfg, policy=candidate, sites=sites,

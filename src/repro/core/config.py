@@ -71,6 +71,13 @@ class DaismConfig:
         approximations").
       k_chunk: K-dim chunk size used by the jnp backend to bound the
         materialized (M, Kc, N) intermediate.
+      attn_kernel: how attention-score sites (OpKind.ATTN_QK) execute.
+        'jnp' keeps the production online-softmax path (always exact
+        numerics — neither attention operand is SRAM-stationary); 'flash'
+        dispatches to the Pallas flash-attention kernel, which fuses this
+        config's approximate QK/PV products with the online-softmax
+        accumulator in VMEM (exact configs run the flash kernel with MXU
+        contractions). Ignored by every other OpKind.
     """
 
     variant: Variant = Variant.PC3_TR
@@ -82,14 +89,20 @@ class DaismConfig:
     k_chunk: int = 64
     # Pallas tiling knobs (block sizes for the kernel); defaults chosen so the
     # working set fits a 16 MiB VMEM budget with headroom (see kernels/).
-    block_m: int = 8
+    # bm=32 relies on the fused shift-plane sweep: the kernel's peak live
+    # intermediate is (bm, K_FUSE, bn), not (bm, bk, bn).
+    block_m: int = 32
     block_n: int = 128
     block_k: int = 128
     interpret: Optional[bool] = None  # None -> auto (True on CPU)
+    attn_kernel: str = "jnp"  # 'jnp' | 'flash' (attention-score sites only)
 
     def __post_init__(self) -> None:
         if self.backward not in ("ste", "approx"):
             raise ValueError(f"backward must be 'ste'|'approx', got {self.backward}")
+        if self.attn_kernel not in ("jnp", "flash"):
+            raise ValueError(
+                f"attn_kernel must be 'jnp'|'flash', got {self.attn_kernel!r}")
         if self.accum_dtype not in _MANTISSA_BITS:
             raise ValueError(
                 f"accum_dtype must be one of {sorted(_MANTISSA_BITS)}, got "

@@ -1,10 +1,24 @@
-"""Pallas TPU kernels for DAISM's compute hot spot (the approximate GEMM).
+"""Pallas TPU kernels for DAISM's compute hot spots.
 
-daism_matmul.py - pl.pallas_call + BlockSpec VMEM tiling (bf16)
-ops.py          - jit'd wrappers (padding, dispatch, interpret auto-detect)
-ref.py          - pure-jnp oracles the kernels are validated against
+daism_matmul.py    - approximate GEMM: pl.pallas_call + BlockSpec VMEM tiling
+flash_attention.py - fused online-softmax attention, exact or DAISM-approx
+approx_product.py  - shared bf16 decompose / shift-plane product primitives
+ops.py             - jit'd wrappers (padding, dispatch, interpret auto-detect)
+ref.py             - pure-jnp oracles the kernels are validated against
 """
+from .approx_product import (approx_matmul_tile, approx_mantissa_product,
+                             compose_products_f32, decompose_bf16_i32)
+from .flash_attention import flash_attention, flash_attention_bhsd
 from .ops import daism_matmul_pallas
 from .ref import daism_matmul_ref
 
-__all__ = ["daism_matmul_pallas", "daism_matmul_ref"]
+__all__ = [
+    "approx_matmul_tile",
+    "approx_mantissa_product",
+    "compose_products_f32",
+    "daism_matmul_pallas",
+    "daism_matmul_ref",
+    "decompose_bf16_i32",
+    "flash_attention",
+    "flash_attention_bhsd",
+]

@@ -6,23 +6,30 @@ on int32 VPU lanes; the pre-computed PC2/PC3 head lines become constant-
 folded selected adds; truncation is a free column mask (carry-free).
 
 Tiling: grid (M/bm, N/bn, K/bk) with K innermost so the f32 accumulator tile
-stays resident in VMEM across the K sweep (revisiting semantics). Working set
-per step:
+stays resident in VMEM across the K sweep (revisiting semantics). The inner
+tile contraction is the *fused* shift-plane sweep from
+:mod:`~repro.kernels.approx_product`: K is consumed in
+:data:`~repro.kernels.approx_product.K_FUSE`-wide sub-chunks whose products
+fold straight into the (bm, bn) accumulator, so the (bm, bk, bn) product
+tensor of the original kernel never materializes. Working set per step:
 
-    a tile (bm, bk) bf16 + w tile (bk, bn) bf16         (streamed from HBM)
-    decomposed int32 planes + (bm, bk, bn) f32 products (VMEM scratch)
-    out tile (bm, bn) f32                                (resident)
+    a tile (bm, bk) bf16 + w tile (bk, bn) bf16          (streamed from HBM)
+    decomposed int32 fields + (bm, K_FUSE, bn) slabs     (VMEM, K-independent)
+    out tile (bm, bn) f32                                 (resident)
 
-Defaults (bm=8, bk=128, bn=128) keep the peak VMEM footprint
-~ 8*128*128*4B * ~3 live temporaries ≈ 1.5 MiB — comfortable within a
-16 MiB VMEM budget, with MXU-aligned (multiple-of-128) N/K tile edges for
-the exact-baseline comparison kernel.
+Defaults (bm=32, bk=128, bn=128): the fusion removed the bm*bk*bn term, so
+the M tile rises 8 -> 32 (4x fewer grid steps) while peak VMEM stays
+~ 3 * 32*8*128 * 4 B of live slab temporaries + tiles ≈ 0.5 MiB —
+comfortable within a 16 MiB VMEM budget, with MXU-aligned
+(multiple-of-128) N/K tile edges for the exact-baseline comparison kernel.
 
-Validated in interpret mode on CPU against kernels/ref.py (bit-exact).
+Validated in interpret mode on CPU against kernels/ref.py (bit-exact
+per-element products; f32 accumulation-order tolerance).
 """
 from __future__ import annotations
 
 import functools
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
@@ -30,84 +37,10 @@ from jax.experimental import pallas as pl
 
 from repro.core.config import DaismConfig, Variant
 
-_BIAS = 127
+from .approx_product import approx_matmul_tile
 
 
-def _decompose_bf16_i32(x):
-    bits = jax.lax.bitcast_convert_type(x, jnp.uint16).astype(jnp.int32)
-    sign = bits >> 15
-    exp = (bits >> 7) & 0xFF
-    man = jnp.where(exp > 0, (bits & 0x7F) | 0x80, 0)
-    return sign, exp, man
-
-
-def _bit(b, i):
-    return (b >> i) & 1
-
-
-def _approx_mantissa_product(mw, mx, variant: Variant):
-    """8-bit mantissa approximate product (int32), float mode (MSB set)."""
-    base = variant.base
-    if base is Variant.EXACT:
-        out = mw * mx
-    elif base is Variant.FLA:
-        out = jnp.zeros_like(mw)
-        for i in range(8):
-            out = out | jnp.where(_bit(mx, i) == 1, mw << i, 0)
-    elif base is Variant.HLA:
-        even = jnp.zeros_like(mw)
-        odd = jnp.zeros_like(mw)
-        for i in range(0, 8, 2):
-            even = even | jnp.where(_bit(mx, i) == 1, mw << i, 0)
-        for i in range(1, 8, 2):
-            odd = odd | jnp.where(_bit(mx, i) == 1, mw << i, 0)
-        out = even + odd
-    elif base in (Variant.PC2, Variant.PC3):
-        k = 2 if base is Variant.PC2 else 3
-        w = _bit(mx, 7) | 1  # float mode: A always active
-        for j in range(1, k):
-            w = 2 * w + _bit(mx, 7 - j)
-        out = (mw * w) << (8 - k)
-        for i in range(0, 8 - k):
-            out = out | jnp.where(_bit(mx, i) == 1, mw << i, 0)
-    else:  # pragma: no cover
-        raise ValueError(variant)
-    if variant.truncated:
-        out = out & (0xFF << 8)
-    return out
-
-
-def _product_block_f32(a_tile, w_tile, variant: Variant):
-    """(bm, bk) x (bk, bn) bf16 -> (bm, bk, bn) f32 approximate products."""
-    sx, ex, mx = _decompose_bf16_i32(a_tile)   # input = multiplier
-    sw, ew, mw = _decompose_bf16_i32(w_tile)   # weight = multiplicand
-    mx3, ex3, sx3 = mx[:, :, None], ex[:, :, None], sx[:, :, None]
-    mw3, ew3, sw3 = mw[None, :, :], ew[None, :, :], sw[None, :, :]
-
-    prod = _approx_mantissa_product(mw3, mx3, variant)
-    top = (prod >> 15) & 1
-    man = jnp.where(top == 1, prod >> 8, prod >> 7) & 0xFF
-
-    sign = sx3 ^ sw3
-    exp = ex3 + ew3 - _BIAS + top
-    zero = (mx3 == 0) | (mw3 == 0)
-    exp = jnp.where(zero, 0, exp)
-    man = jnp.where(zero, 0, man)
-    # Compose f32 directly from integer fields (subnormal-flush, saturate).
-    is_zero = (man == 0) | (exp <= 0)
-    is_inf = exp >= 255
-    bits = (
-        (sign.astype(jnp.uint32) << 31)
-        | (jnp.clip(exp, 0, 254).astype(jnp.uint32) << 23)
-        | ((man << 16) & 0x7FFFFF).astype(jnp.uint32)
-    )
-    bits = jnp.where(is_zero, sign.astype(jnp.uint32) << 31, bits)
-    bits = jnp.where(is_inf & ~is_zero,
-                     (sign.astype(jnp.uint32) << 31) | jnp.uint32(0x7F800000), bits)
-    return jax.lax.bitcast_convert_type(bits, jnp.float32)
-
-
-def _kernel(a_ref, w_ref, o_ref, *, variant: Variant, k_steps: int):
+def _kernel(a_ref, w_ref, o_ref, *, variant: Variant):
     @pl.when(pl.program_id(2) == 0)
     def _init():
         o_ref[...] = jnp.zeros_like(o_ref)
@@ -120,8 +53,7 @@ def _kernel(a_ref, w_ref, o_ref, *, variant: Variant, k_steps: int):
             a_tile.astype(jnp.float32), w_tile.astype(jnp.float32),
             preferred_element_type=jnp.float32)
     else:
-        prod = _product_block_f32(a_tile, w_tile, variant)
-        o_ref[...] += prod.sum(axis=1)
+        o_ref[...] += approx_matmul_tile(a_tile, w_tile, variant)
 
 
 def daism_matmul_kernel(
@@ -129,23 +61,29 @@ def daism_matmul_kernel(
     w: jnp.ndarray,
     *,
     variant: Variant = Variant.PC3_TR,
-    block_m: int = 8,
+    block_m: int = 32,
     block_n: int = 128,
     block_k: int = 128,
-    interpret: bool = True,
+    interpret: Optional[bool] = None,
 ) -> jnp.ndarray:
     """(M, K) @ (K, N) -> (M, N) f32 via the DAISM Pallas kernel.
 
     Requires M % block_m == K % block_k == N % block_n == 0 (the ops.py
     wrapper pads). bf16 inputs only (f32 uses the dual-plane jnp path).
+    ``interpret=None`` resolves through
+    :func:`repro.policy.dispatch.auto_interpret` (explicit setting wins,
+    else interpret on CPU, compiled on TPU) so direct callers never silently
+    benchmark interpret mode on hardware.
     """
+    from repro.policy.dispatch import auto_interpret
+
     m, k = a.shape
     k2, n = w.shape
     assert k == k2
     assert m % block_m == 0 and n % block_n == 0 and k % block_k == 0, (
         (m, k, n), (block_m, block_k, block_n))
     grid = (m // block_m, n // block_n, k // block_k)
-    kernel = functools.partial(_kernel, variant=Variant(variant), k_steps=grid[2])
+    kernel = functools.partial(_kernel, variant=Variant(variant))
     return pl.pallas_call(
         kernel,
         grid=grid,
@@ -155,5 +93,5 @@ def daism_matmul_kernel(
         ],
         out_specs=pl.BlockSpec((block_m, block_n), lambda i, j, kk: (i, j)),
         out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
-        interpret=interpret,
+        interpret=auto_interpret(interpret),
     )(a, w)

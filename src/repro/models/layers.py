@@ -4,9 +4,14 @@ Every parameter GEMM routes through :func:`dense`, which resolves its
 numerics per op-site through the architecture's injectable approximation
 policy (``cfg.approx_policy``, see :mod:`repro.policy`) — the paper's
 technique as a first-class framework feature, addressable per layer
-(DESIGN.md §2). Dynamic attention GEMMs (qk^T, att@v) stay exact: DAISM
-multiplies a *stationary* SRAM-resident operand (weights) against streamed
-inputs; neither attention operand is stationary.
+(DESIGN.md §2). Dynamic attention GEMMs (qk^T, att@v) default to exact —
+DAISM multiplies a *stationary* SRAM-resident operand against streamed
+inputs, and neither attention operand is stationary — but a policy rule
+carrying the ``:flash`` token (``*/attn/*=pc3_tr:flash``) opts the
+``.../attn/kernel`` site (OpKind.ATTN_QK) into the fused Pallas
+flash-attention kernel, where scores and (optionally approximate) products
+stay VMEM-resident. Cached decode shapes always fall back to the exact jnp
+path.
 """
 from __future__ import annotations
 
@@ -20,7 +25,7 @@ from jax import lax
 
 from repro.parallel.sharding import constrain
 from repro.parallel.unroll import unroll_for
-from repro.policy import OpKind, policy_dot
+from repro.policy import OpKind, attention_kernel, policy_dot, resolve_site
 
 from .common import ArchConfig
 from .module import Ctx, lecun_init, normal_init, ones_init, zeros_init
@@ -119,7 +124,8 @@ def attend(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
            q_pos: jnp.ndarray, kv_pos: jnp.ndarray, *,
            causal: bool, window: int = 0, chunk: int = 1024,
            softcap: float = 0.0, unroll_category: str = "attn",
-           score_dtype=jnp.float32) -> jnp.ndarray:
+           score_dtype=jnp.float32, policy=None,
+           record: bool = True) -> jnp.ndarray:
     """Online-softmax attention (never materializes the full S x S matrix).
 
     q: (B, Sq, H, D); k, v: (B, Skv, KH, D); *_pos: (Sq,) / (Skv,) absolute
@@ -128,9 +134,30 @@ def attend(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
     slot-cache serving path, where every batch row is an independent request
     at its own sequence offset (masks then cost an extra batch dim, so the
     shared-position fast path is kept for train/prefill).
+
+    With ``policy`` set, the call resolves the ambient ``kernel`` site
+    (OpKind.ATTN_QK) and, when the effective config requests the flash
+    kernel and the shape is eligible (shared 1-D positions, no window, no
+    softcap, and sq == skv when causal — the kernel masks by index, which
+    matches position masking for the monotone position vectors every
+    non-cached path uses), dispatches to the fused Pallas flash attention.
+    Ineligible shapes (windowed, softcapped, per-row serving, cached decode)
+    resolve — and are recorded — as EXACT and take the jnp path below.
     """
     b, sq, h, d = q.shape
     skv, kh = k.shape[1], k.shape[2]
+    if policy is not None:
+        flash_ok = (jnp.ndim(q_pos) == 1 and jnp.ndim(kv_pos) == 1
+                    and window == 0 and softcap == 0.0
+                    and (not causal or sq == skv))
+        macs = 2 * b * h * sq * skv * d  # qk^T + att@v
+        # dims of one head's qk^T contraction (the flash kernel's grid unit)
+        site_cfg = resolve_site(policy, "kernel", OpKind.ATTN_QK, q.dtype,
+                                record=record, macs=macs,
+                                dims=(sq, d, skv),
+                                attn_eligible=flash_ok)
+        if flash_ok and site_cfg.attn_kernel == "flash":
+            return attention_kernel(site_cfg)(q, k, v, causal)
     k = _repeat_kv(k, h // kh)
     v = _repeat_kv(v, h // kh)
     scale = 1.0 / np.sqrt(d)
@@ -289,7 +316,9 @@ def self_attention(ctx: Ctx, x: jnp.ndarray, cfg: ArchConfig, *,
                      window=cfg.window, chunk=cfg.attn_chunk,
                      softcap=cfg.logit_softcap,
                      unroll_category=unroll_category,
-                     score_dtype=cfg.attn_score_dtype)
+                     score_dtype=cfg.attn_score_dtype,
+                     policy=cfg.approx_policy,
+                     record=ctx.mode == "apply")
     out = out.reshape(b, s, nh * hd)
     out = dense(ctx, "wo", out, x.shape[-1], cfg, axes=("heads", "embed"),
                 use_bias=use_bias)
@@ -310,7 +339,9 @@ def cross_attention(ctx: Ctx, x: jnp.ndarray, kv_src: jnp.ndarray,
               use_bias=use_bias).reshape(b, skv, kh, hd)
     out = attend(q, k, v, jnp.arange(s), jnp.arange(skv), causal=False,
                  chunk=skv,  # single chunk: small KV, uniform attn trips
-                 score_dtype=cfg.attn_score_dtype)
+                 score_dtype=cfg.attn_score_dtype,
+                 policy=cfg.approx_policy,
+                 record=ctx.mode == "apply")
     out = out.reshape(b, s, nh * hd)
     return dense(ctx, "wo", out, x.shape[-1], cfg, axes=("heads", "embed"),
                  use_bias=use_bias)

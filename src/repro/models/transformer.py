@@ -39,7 +39,12 @@ def mlp_sites(cfg: ArchConfig, base: str):
 
 
 def attn_sites(base: str):
-    return [(f"{base}/{n}", OpKind.DENSE) for n in ("wq", "wk", "wv", "wo")]
+    sites = [(f"{base}/{n}", OpKind.DENSE) for n in ("wq", "wk", "wv", "wo")]
+    # the dynamic qk^T/att@v contraction pair resolves as one ATTN_QK site
+    # (models/layers.attend) — it must be probed too, or a depth rule that
+    # only changes attention dispatch would be invisible to segmentation
+    sites.append((f"{base}/kernel", OpKind.ATTN_QK))
+    return sites
 
 
 def decoder_block_sites(cfg: ArchConfig, i: int, prefix: str = "decoder"):

@@ -48,9 +48,10 @@ Public API
 """
 from __future__ import annotations
 
-from .dispatch import (SiteEvent, auto_interpret, clear_log,
-                       energy_per_mult_pj, estimated_energy_uj, kernel_stats,
-                       make_dot, matmul_kernel, observe_sites, policy_conv2d,
+from .dispatch import (SiteEvent, attention_kernel, auto_interpret,
+                       clear_log, effective_attn_config, energy_per_mult_pj,
+                       estimated_energy_uj, kernel_stats, make_dot,
+                       matmul_kernel, observe_sites, policy_conv2d,
                        policy_dot, policy_expert_matmul, resolution_log,
                        resolve_site, site_report, validate_for_dtype)
 from .policy import (EXACT, ApproxPolicy, Rule, describe_config,
@@ -66,6 +67,7 @@ __all__ = [
     "resolve_site", "validate_for_dtype", "auto_interpret",
     "site_report", "resolution_log", "estimated_energy_uj",
     "kernel_stats", "clear_log", "matmul_kernel",
+    "attention_kernel", "effective_attn_config",
     "plan_segments", "layer_signature",
     "observe_sites", "SiteEvent", "energy_per_mult_pj",
 ]

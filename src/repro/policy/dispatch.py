@@ -28,7 +28,7 @@ import numpy as np
 
 from repro.core.config import Backend, DaismConfig, Variant
 
-from .policy import ApproxPolicy, describe_config
+from .policy import EXACT, ApproxPolicy, describe_config
 from .sites import OpKind, current_path, current_repeat
 
 # ---------------------------------------------------------------------------
@@ -38,11 +38,37 @@ from .sites import OpKind, current_path, current_repeat
 _GEMM_DTYPES = ("bfloat16", "float32")
 
 
-def auto_interpret(cfg: DaismConfig) -> bool:
-    """Pallas interpret mode: explicit setting wins, else True off-TPU."""
-    if cfg.interpret is not None:
-        return cfg.interpret
+def auto_interpret(cfg: "DaismConfig | bool | None" = None) -> bool:
+    """Pallas interpret mode: explicit setting wins, else True off-TPU.
+
+    The one home for interpret auto-selection: accepts a full
+    :class:`DaismConfig` (its ``interpret`` field is the explicit setting)
+    or the bare explicit flag, so direct kernel entry points
+    (``kernels.daism_matmul`` / ``kernels.flash_attention``) resolve their
+    ``interpret=None`` defaults through the same explicit-wins/TPU-compiles
+    semantics as the policy dispatcher.
+    """
+    explicit = cfg.interpret if isinstance(cfg, DaismConfig) else cfg
+    if explicit is not None:
+        return explicit
     return jax.default_backend() == "cpu"
+
+
+def effective_attn_config(cfg: DaismConfig, *,
+                          eligible: bool = True) -> DaismConfig:
+    """The config an attention-score site (OpKind.ATTN_QK) actually runs.
+
+    Attention numerics follow the resolved config only when it opts into the
+    fused flash kernel (``attn_kernel='flash'``) *and* the call shape is
+    flash-eligible; otherwise the site executes the exact jnp online-softmax
+    path, so its effective config is EXACT. This keeps catch-all rules like
+    ``*=pc3_tr`` from silently changing attention numerics (or the energy
+    report) the moment the ATTN_QK site exists — approximating the dynamic
+    attention GEMMs is strictly opt-in via the ``:flash`` spec token.
+    """
+    if cfg.attn_kernel == "flash" and eligible:
+        return cfg
+    return EXACT
 
 
 def validate_for_dtype(cfg: DaismConfig, dtype, *, site: str = "") -> None:
@@ -226,6 +252,30 @@ def matmul_kernel(cfg: DaismConfig) -> Callable:
     return jax.jit(kernel)
 
 
+@functools.lru_cache(maxsize=None)
+def attention_kernel(cfg: DaismConfig) -> Callable:
+    """One jitted flash-attention callable per distinct resolved config.
+
+    ``kernel(q, k, v, causal)`` takes (B, S, H, D) tensors (GQA head repeat
+    and ragged-length padding happen inside the wrapper); ``causal`` is a
+    static argument. Exact configs run the kernel with MXU contractions
+    (``variant=None``); approximate configs fuse the config's shift-plane
+    product into the QK/PV contractions.
+    """
+    from repro.kernels.flash_attention import flash_attention_bhsd
+
+    _STATS["kernel_builds"] += 1
+    variant = None if cfg.exact else cfg.variant
+    interpret = auto_interpret(cfg)
+
+    def kernel(q, k, v, causal):
+        _STATS["kernel_traces"] += 1  # runs at trace time only
+        return flash_attention_bhsd(q, k, v, causal=causal, variant=variant,
+                                    interpret=interpret)
+
+    return jax.jit(kernel, static_argnames=("causal",))
+
+
 def kernel_stats() -> Dict[str, int]:
     info = matmul_kernel.cache_info()
     return dict(_STATS, cache_hits=info.hits, cache_misses=info.misses,
@@ -239,12 +289,28 @@ def kernel_stats() -> Dict[str, int]:
 
 def resolve_site(policy: ApproxPolicy, name: str, kind: OpKind, dtype,
                  *, record: bool = True, macs: int = 0,
-                 dims: Tuple[int, int, int] = (0, 0, 0)) -> DaismConfig:
+                 dims: Tuple[int, int, int] = (0, 0, 0),
+                 attn_eligible: bool = True) -> DaismConfig:
     """Resolve + validate the config for the site named ``name`` under the
-    ambient site scope. Returns the (frozen) resolved DaismConfig."""
+    ambient site scope. Returns the (frozen) resolved DaismConfig.
+
+    ATTN_QK sites resolve to their *effective* config (see
+    :func:`effective_attn_config`): the rule's numerics apply only when it
+    opts into the flash kernel and the caller's shape is eligible
+    (``attn_eligible``); otherwise the site runs — and is recorded as —
+    EXACT.
+    """
     path = current_path(name)
     kind = OpKind(kind)
     cfg = policy.resolve(path, kind)
+    if kind is OpKind.ATTN_QK:
+        cfg = effective_attn_config(cfg, eligible=attn_eligible)
+        if not cfg.exact and jnp.dtype(dtype).name != "bfloat16":
+            raise ValueError(
+                f"site {path!r}: flash attention with a DAISM variant is "
+                f"bfloat16-only (got {jnp.dtype(dtype).name}); run the site "
+                "exact (drop the variant, keep ':flash') or switch the "
+                "compute dtype to bfloat16")
     validate_for_dtype(cfg, dtype, site=path)
     if record:
         repeat = current_repeat()

@@ -13,8 +13,9 @@ Spec mini-language (CLI ``--policy`` flags, :func:`parse_policy`)::
 
     */attn/*=exact,*/layer_0/*=exact,@lm_head=exact,*=pc3_tr
 
-Each comma-separated rule is ``pattern=variant[:backend]``; a trailing
-``*=...`` rule (or the ``default=`` key) sets the fallback config.
+Each comma-separated rule is ``pattern=variant[:backend][:flash]`` (the
+``flash`` token opts attention-score sites into the fused Pallas kernel); a
+trailing ``*=...`` rule (or the ``default=`` key) sets the fallback config.
 """
 from __future__ import annotations
 
@@ -130,9 +131,12 @@ def _resolve_cached(policy: ApproxPolicy, path: str,
 
 
 def describe_config(cfg: DaismConfig) -> str:
+    flash = cfg.attn_kernel == "flash"
     if cfg.exact:
-        return "exact"
+        return "exact:flash" if flash else "exact"
     tags = [cfg.variant.value, cfg.backend.value]
+    if flash:
+        tags.append("flash")
     if cfg.calibrated:
         tags.append("calibrated")
     if cfg.backward == "approx":
@@ -149,15 +153,31 @@ _BACKEND_NAMES = {b.value for b in Backend}
 
 
 def parse_config(spec: str) -> DaismConfig:
-    """``variant[:backend]`` -> DaismConfig (``exact`` -> the exact config)."""
+    """``variant[:backend][:flash]`` -> DaismConfig.
+
+    ``exact`` -> the exact config; a trailing ``flash`` token sets
+    ``attn_kernel='flash'`` so attention-score sites matched by the rule
+    dispatch to the fused Pallas flash-attention kernel (``exact:flash``
+    runs it with MXU contractions; ``pc3_tr:flash`` fuses the approximate
+    products). Without it, attention-score sites stay on the exact jnp
+    online-softmax path whatever the rule's numerics say.
+    """
     parts = spec.strip().split(":")
+    attn_kernel = "jnp"
+    if len(parts) > 1 and parts[-1] == "flash":
+        attn_kernel = "flash"
+        parts = parts[:-1]
     variant = parts[0]
     if variant not in _VARIANT_NAMES:
         raise ValueError(
             f"unknown variant {variant!r}; expected one of "
             f"{sorted(_VARIANT_NAMES)}")
     if variant == Variant.EXACT.value:
-        return EXACT
+        if len(parts) > 1:
+            raise ValueError(f"config spec {spec!r}: 'exact' takes no "
+                             "backend (only an optional ':flash')")
+        return EXACT if attn_kernel == "jnp" else EXACT.replace(
+            attn_kernel="flash")
     backend = parts[1] if len(parts) > 1 else Backend.JNP.value
     if backend not in _BACKEND_NAMES:
         raise ValueError(
@@ -165,8 +185,9 @@ def parse_config(spec: str) -> DaismConfig:
             f"{sorted(_BACKEND_NAMES)}")
     if len(parts) > 2:
         raise ValueError(f"config spec {spec!r} has too many ':' fields "
-                         "(expected variant[:backend])")
-    return DaismConfig(variant=Variant(variant), backend=Backend(backend))
+                         "(expected variant[:backend][:flash])")
+    return DaismConfig(variant=Variant(variant), backend=Backend(backend),
+                       attn_kernel=attn_kernel)
 
 
 def parse_policy(spec: str, default: DaismConfig = EXACT,
@@ -217,8 +238,22 @@ SitesFn = Callable[[int], Iterable[Tuple[str, OpKind]]]
 
 def layer_signature(policy: ApproxPolicy, sites: Iterable[Tuple[str, OpKind]]
                     ) -> Tuple[DaismConfig, ...]:
-    """Resolved configs for a layer's probe sites (its policy fingerprint)."""
-    return tuple(policy.resolve(path, kind) for path, kind in sites)
+    """Resolved configs for a layer's probe sites (its policy fingerprint).
+
+    ATTN_QK probes use the *effective* attention config (what the traced
+    layer actually runs — see ``dispatch.effective_attn_config``), so a
+    catch-all numerics rule that leaves attention on the exact jnp path
+    doesn't split scan segments over a difference that never reaches HLO.
+    """
+    from .dispatch import effective_attn_config
+
+    out = []
+    for path, kind in sites:
+        cfg = policy.resolve(path, kind)
+        if OpKind(kind) is OpKind.ATTN_QK:
+            cfg = effective_attn_config(cfg)
+        out.append(cfg)
+    return tuple(out)
 
 
 def plan_segments(policy: ApproxPolicy, sites_fn: SitesFn, lo: int, hi: int

@@ -34,7 +34,8 @@ class OpKind(str, enum.Enum):
 
     DENSE = "dense"            # parameter GEMM (projections, FC, MLP)
     CONV = "conv"              # convolution lowered to im2col GEMM
-    ATTN_QK = "attn_qk"        # dynamic attention GEMM (reserved: stays exact)
+    ATTN_QK = "attn_qk"        # dynamic attention GEMMs (qk^T + att@v); exact
+    #                            unless the rule opts into ':flash' dispatch
     MOE_EXPERT = "moe_expert"  # batched expert GEMM inside an MoE FFN
     LM_HEAD = "lm_head"        # unembedding / classifier head
 

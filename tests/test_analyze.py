@@ -88,9 +88,12 @@ def test_deprecated_daism_shim_warns():
 
 def test_tiling_padding_and_vmem_warnings():
     from repro.policy import EXACT, ApproxPolicy, Rule
-    # spec grammar has no block syntax: build the policy programmatically
+    # spec grammar has no block syntax: build the policy programmatically.
+    # The fused plane sweep made the VMEM estimate K-independent (live slabs
+    # are (bm, K_FUSE, bn)), so only very large M/N tiles can blow the
+    # budget now — block_k only enters through the streamed bf16 tiles.
     bad = DaismConfig(variant=Variant.PC3_TR, backend=Backend.PALLAS,
-                      block_m=512, block_n=100, block_k=2048)
+                      block_m=2048, block_n=1000, block_k=2048)
     pol = ApproxPolicy(rules=(Rule("*/ffn/*", bad),), default=EXACT)
     graph = trace_site_graph(smoke_lm(), pol)
     found = codes(check_tiling(graph))
@@ -102,6 +105,27 @@ def test_tiling_interpret_fallback_info_on_cpu():
     til = check_tiling(graph)
     assert "TIL003" in codes(til)
     assert all(f.severity in ("info", "warning") for f in til)
+
+
+def test_attention_checker_flags_ragged_flash_tiles():
+    from repro.analyze import check_attention
+    # seq=8 pads to the 128-wide flash tiles; head_dim 64 is off-lane too
+    graph = trace_site_graph(smoke_lm(),
+                             "*/attn/kernel=exact:flash,*=exact")
+    found = check_attention(graph)
+    assert any(f.code == "TIL004" and f.severity == "warning"
+               and f.site.endswith("attn/kernel") for f in found)
+    # without the ':flash' opt-in the ATTN_QK sites run exact jnp — silent
+    assert not check_attention(trace_site_graph(smoke_lm(), "*=pc3_tr"))
+
+
+def test_attention_checker_flags_non_bf16_flash_variant():
+    from repro.analyze import check_attention
+    cfg = dataclasses.replace(smoke_lm(), compute_dtype="float32",
+                              param_dtype="float32")
+    graph = trace_site_graph(cfg, "*/attn/kernel=pc3_tr:flash,*=exact")
+    found = check_attention(graph)
+    assert any(f.code == "TIL005" and f.severity == "error" for f in found)
 
 
 def test_recompile_hazards_on_depth_schedule():

@@ -4,7 +4,9 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.kernels.flash_attention import flash_attention_bhsd
+from repro.core.config import Variant
+from repro.kernels.flash_attention import flash_attention, flash_attention_bhsd
+from repro.kernels.ref import daism_matmul_ref
 from repro.models.layers import attend
 
 
@@ -71,3 +73,133 @@ def test_block_shape_invariance():
             for bq, bk in [(64, 64), (128, 128), (64, 128)]]
     for o in outs[1:]:
         np.testing.assert_allclose(o, outs[0], rtol=2e-2, atol=2e-3)
+
+
+def test_fully_masked_causal_tiles():
+    """Small KV blocks make whole (bq, bk) tiles causally masked (q tile 0 x
+    every later kv tile): they must contribute nothing, not NaN/garbage."""
+    rng = np.random.default_rng(3)
+    b, s, h, d = 2, 128, 2, 32
+    q = jnp.asarray(rng.normal(size=(b, s, h, d)), jnp.bfloat16)
+    k = jnp.asarray(rng.normal(size=(b, s, h, d)), jnp.bfloat16)
+    v = jnp.asarray(rng.normal(size=(b, s, h, d)), jnp.bfloat16)
+    out = flash_attention_bhsd(q, k, v, causal=True, block_q=32, block_k=32)
+    assert not np.isnan(np.asarray(out, np.float32)).any()
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(_naive(q, k, v), np.float32),
+                               rtol=2e-2, atol=2e-3)
+
+
+@pytest.mark.parametrize("shape", [
+    (2, 100, 72, 4, 2, 64),   # both lengths ragged, cross-shaped
+    (1, 64, 130, 2, 1, 32),   # Skv > Sq, 2 ragged kv tiles
+])
+def test_padded_non_causal(shape):
+    """causal=False with non-multiple-of-block lengths: padded keys must be
+    masked via kv_len (an earlier revision asserted instead of masking)."""
+    b, sq, skv, h, kh, d = shape
+    rng = np.random.default_rng(sum(shape))
+    q = jnp.asarray(rng.normal(size=(b, sq, h, d)), jnp.bfloat16)
+    k = jnp.asarray(rng.normal(size=(b, skv, kh, d)), jnp.bfloat16)
+    v = jnp.asarray(rng.normal(size=(b, skv, kh, d)), jnp.bfloat16)
+    out = flash_attention_bhsd(q, k, v, causal=False, block_q=64, block_k=64)
+    ref = _naive(q, k, v, causal=False)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref, np.float32),
+                               rtol=2e-2, atol=2e-3)
+
+
+def test_gqa_head_repeat_matches_attend():
+    """8 query heads over 2 KV heads: the kernel's jnp.repeat layout must
+    agree with attend's broadcast-repeat for every head, not just head 0."""
+    rng = np.random.default_rng(4)
+    b, s, h, kh, d = 1, 128, 8, 2, 64
+    q = jnp.asarray(rng.normal(size=(b, s, h, d)), jnp.bfloat16)
+    k = jnp.asarray(rng.normal(size=(b, s, kh, d)), jnp.bfloat16)
+    v = jnp.asarray(rng.normal(size=(b, s, kh, d)), jnp.bfloat16)
+    pos = jnp.arange(s)
+    prod = attend(q, k, v, pos, pos, causal=True, chunk=32)
+    flash = flash_attention_bhsd(q, k, v, block_q=64, block_k=64)
+    np.testing.assert_allclose(np.asarray(flash, np.float32),
+                               np.asarray(prod, np.float32),
+                               rtol=2e-2, atol=2e-3)
+
+
+# ---------------------------------------------------------------------------
+# DAISM-approximate flash attention vs kernels/ref.py oracles
+# ---------------------------------------------------------------------------
+
+def _flash_semantics_oracle(q, k, v, variant, causal):
+    """Single-KV-tile mirror of the fused kernel's math: approximate QK
+    (kernels/ref.py), scale, mask, *unnormalized* exp weights cast to bf16,
+    approximate PV, exact divide by the row sum. Bit-comparable to the
+    kernel up to f32 accumulation order when Skv fits one KV tile."""
+    bh, s, d = q.shape
+    outs = []
+    for i in range(bh):
+        s_mat = daism_matmul_ref(q[i], k[i].T, variant) * (1.0 / np.sqrt(d))
+        if causal:
+            mask = np.tril(np.ones((s, s), bool))
+            s_mat = jnp.where(mask, s_mat, -1e30)
+        m = s_mat.max(-1, keepdims=True)
+        p = jnp.exp(s_mat - m)
+        if causal:
+            p = jnp.where(mask, p, 0.0)
+        pv = daism_matmul_ref(p.astype(jnp.bfloat16), v[i], variant)
+        outs.append(pv / p.sum(-1, keepdims=True))
+    return jnp.stack(outs)
+
+
+@pytest.mark.parametrize("causal", [True, False])
+@pytest.mark.parametrize("variant", [Variant.PC3_TR, Variant.FLA])
+def test_flash_approx_matches_ref_single_tile(variant, causal):
+    """QK/PV products through the fused kernel carry kernels/ref.py
+    semantics: with one KV tile the only slack is f32 accumulation order
+    (amplified once through exp), so the tolerance is tight."""
+    rng = np.random.default_rng(5)
+    bh, s, d = 2, 128, 64
+    q = jnp.asarray(rng.normal(size=(bh, s, d)), jnp.bfloat16)
+    k = jnp.asarray(rng.normal(size=(bh, s, d)), jnp.bfloat16)
+    v = jnp.asarray(rng.normal(size=(bh, s, d)), jnp.bfloat16)
+    out = flash_attention(q, k, v, causal=causal, variant=variant,
+                          block_q=128, block_k=128)
+    ref = _flash_semantics_oracle(q, k, v, variant, causal)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref, np.float32), atol=2e-2)
+
+
+def test_flash_approx_near_naive_softmax_oracle():
+    """Multi-tile approximate attention stays close to the composed oracle
+    (ref products + naive softmax). The oracle normalizes p *before* the
+    bf16 cast while the kernel divides by l after the approximate PV — the
+    approximate multiplier is not scale-invariant, so the comparison is
+    loose; exactness per product is the single-tile test above."""
+    rng = np.random.default_rng(6)
+    bh, s, d = 2, 128, 64
+    variant = Variant.PC3_TR
+    q = jnp.asarray(rng.normal(size=(bh, s, d)), jnp.bfloat16)
+    k = jnp.asarray(rng.normal(size=(bh, s, d)), jnp.bfloat16)
+    v = jnp.asarray(rng.normal(size=(bh, s, d)), jnp.bfloat16)
+    out = flash_attention(q, k, v, causal=True, variant=variant,
+                          block_q=64, block_k=64)
+    outs = []
+    for i in range(bh):
+        s_mat = daism_matmul_ref(q[i], k[i].T, variant) / np.sqrt(d)
+        s_mat = jnp.where(np.tril(np.ones((s, s), bool)), s_mat, -1e30)
+        p = jax.nn.softmax(s_mat, -1)
+        outs.append(daism_matmul_ref(p.astype(jnp.bfloat16), v[i], variant))
+    ref = jnp.stack(outs)
+    exact = flash_attention(q, k, v, causal=True, block_q=64, block_k=64
+                            ).astype(jnp.float32)
+    err_vs_oracle = float(jnp.max(jnp.abs(out - ref)))
+    # the approximate paths agree with each other far better than either
+    # agrees with exact attention — the deviation is the variant, not a bug
+    err_vs_exact = float(jnp.max(jnp.abs(jnp.asarray(ref) - exact)))
+    assert err_vs_oracle <= max(0.25, 0.75 * err_vs_exact), \
+        (err_vs_oracle, err_vs_exact)
+
+
+def test_flash_approx_requires_bf16():
+    q = jnp.ones((1, 128, 16), jnp.float32)
+    with pytest.raises(ValueError, match="bfloat16-only"):
+        flash_attention(q, q, q, variant=Variant.PC3_TR)

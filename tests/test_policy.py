@@ -421,3 +421,117 @@ def test_interpret_mode_keys_kernel_cache():
     assert P.matmul_kernel(dataclasses.replace(base, interpret=True)) \
         is k_forced
     assert P.matmul_kernel(dataclasses.replace(base)) is k_auto
+
+
+# ---------------------------------------------------------------------------
+# Flash-attention dispatch (OpKind.ATTN_QK sites)
+# ---------------------------------------------------------------------------
+
+def test_parse_config_flash_token():
+    cfg = P.parse_config("pc3_tr:flash")
+    assert cfg.variant is Variant.PC3_TR
+    assert cfg.backend is Backend.JNP
+    assert cfg.attn_kernel == "flash"
+    assert P.describe_config(cfg) == "pc3_tr:jnp:flash"
+    ex = P.parse_config("exact:flash")
+    assert ex.exact and ex.attn_kernel == "flash"
+    assert P.describe_config(ex) == "exact:flash"
+    with_backend = P.parse_config("fla:pallas:flash")
+    assert with_backend.backend is Backend.PALLAS
+    assert with_backend.attn_kernel == "flash"
+    assert P.parse_config("pc3_tr").attn_kernel == "jnp"
+    with pytest.raises(ValueError, match="too many"):
+        P.parse_config("fla:jnp:pallas:flash")
+    with pytest.raises(ValueError):
+        DaismConfig(attn_kernel="bogus")
+
+
+def test_effective_attn_config_is_opt_in():
+    """Catch-all numerics rules must not leak into attention: only the
+    ':flash' token changes what an ATTN_QK site runs."""
+    assert P.effective_attn_config(PC3_TR) is P.EXACT
+    flash = dataclasses.replace(PC3_TR, attn_kernel="flash")
+    assert P.effective_attn_config(flash) is flash
+    assert P.effective_attn_config(flash, eligible=False) is P.EXACT
+
+
+def test_attn_site_resolves_effective_config():
+    pol = P.parse_policy("*=pc3_tr")  # catch-all, no flash opt-in
+    with P.site_scope("decoder"), P.site_scope("layer_0"), \
+            P.site_scope("attn"):
+        cfg = P.resolve_site(pol, "kernel", P.OpKind.ATTN_QK, jnp.bfloat16,
+                             record=False)
+    assert cfg is P.EXACT
+    flash_pol = P.parse_policy("*/attn/kernel=pc3_tr:flash,*=exact")
+    with P.site_scope("decoder"), P.site_scope("layer_0"), \
+            P.site_scope("attn"):
+        cfg = P.resolve_site(flash_pol, "kernel", P.OpKind.ATTN_QK,
+                             jnp.bfloat16, record=False)
+        assert cfg.attn_kernel == "flash" and cfg.variant is Variant.PC3_TR
+        # ineligible shapes (windowed / per-row / cached decode) fall back
+        assert P.resolve_site(flash_pol, "kernel", P.OpKind.ATTN_QK,
+                              jnp.bfloat16, record=False,
+                              attn_eligible=False) is P.EXACT
+        with pytest.raises(ValueError, match="bfloat16-only"):
+            P.resolve_site(flash_pol, "kernel", P.OpKind.ATTN_QK,
+                           jnp.float32, record=False)
+
+
+def test_flash_exact_policy_token_identical_to_jnp_path():
+    """attend must route through flash_attention_bhsd under a requesting
+    policy, and the exact variant must not change a single logit argmax."""
+    cfg = get_config("tinyllama_1_1b").smoke(n_layers=2, vocab=64)
+    model = build_model(cfg.with_policy("*=exact"))
+    params, _ = model.init(RNG)
+    batch = {"tokens": jax.random.randint(RNG, (2, 64), 0, cfg.vocab)}
+    ref, _ = model.forward(params, batch)
+    flash_model = build_model(
+        cfg.with_policy("*/attn/kernel=exact:flash,*=exact"))
+    out, _ = flash_model.forward(params, batch)
+    r = np.asarray(ref, np.float32)
+    o = np.asarray(out, np.float32)
+    np.testing.assert_array_equal(r.argmax(-1), o.argmax(-1))
+    np.testing.assert_allclose(o, r, rtol=2e-2, atol=2e-3)
+
+
+def test_flash_approx_policy_runs_and_records():
+    cfg = get_config("tinyllama_1_1b").smoke(n_layers=2, vocab=64)
+    pol = P.parse_policy("*/attn/kernel=pc3_tr:flash,*=exact", name="fa")
+    model = build_model(cfg.with_policy(pol))
+    params, _ = model.init(RNG)
+    batch = {"tokens": jax.random.randint(RNG, (2, 64), 0, cfg.vocab)}
+    P.clear_log(pol)
+    out, _ = model.forward(params, batch)
+    assert np.isfinite(np.asarray(out, np.float32)).all()
+    log = P.resolution_log(pol)
+    attn_sites = {path: c for (path, kind), (c, _, _) in log.items()
+                  if kind is P.OpKind.ATTN_QK}
+    assert attn_sites, log.keys()
+    assert all(c.attn_kernel == "flash" and c.variant is Variant.PC3_TR
+               for c in attn_sites.values())
+    # approximate attention must actually change the logits
+    ref, _ = build_model(cfg.with_policy("*=exact")).forward(params, batch)
+    assert np.abs(np.asarray(out, np.float32)
+                  - np.asarray(ref, np.float32)).max() > 1e-3
+
+
+def test_cached_decode_keeps_exact_fallback():
+    """Decode steps use the KV-cache branches, which never pass a policy:
+    a flash-requesting policy must not disturb cached decoding (the exact
+    flash variant is bit-compatible with the jnp path, so decode-vs-forward
+    agreement shows the decode side ignored the flash request)."""
+    cfg = get_config("tinyllama_1_1b").smoke(n_layers=2, vocab=64)
+    pol = P.parse_policy("*/attn/kernel=exact:flash,*=exact", name="fa2")
+    model = build_model(cfg.with_policy(pol))
+    params, _ = model.init(RNG)
+    toks = jax.random.randint(RNG, (1, 8), 0, cfg.vocab)
+    full, _ = model.forward(params, {"tokens": toks})
+    cache = model.init_cache(1, 8)
+    logits = []
+    for t in range(toks.shape[1]):
+        step, cache = model.decode_step(params, toks[:, t:t + 1], cache)
+        logits.append(step)
+    dec = jnp.concatenate(logits, axis=1)
+    np.testing.assert_allclose(np.asarray(dec, np.float32),
+                               np.asarray(full, np.float32),
+                               rtol=2e-2, atol=2e-3)
