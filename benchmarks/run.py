@@ -12,6 +12,7 @@ from __future__ import annotations
 
 import json
 import os
+import subprocess
 import sys
 import time
 
@@ -26,8 +27,26 @@ def _artifact_path(name: str) -> str:
     return os.path.join(_REPO_ROOT, f"BENCH_{short}.json")
 
 
+def _meta() -> dict:
+    """Provenance stamp: which code/runtime produced the artifact, so
+    cross-PR perf trajectories are comparable (and non-comparable runs —
+    different device counts, jax versions — are visibly so)."""
+    try:
+        sha = subprocess.run(["git", "rev-parse", "--short", "HEAD"],
+                             cwd=_REPO_ROOT, capture_output=True, text=True,
+                             timeout=10).stdout.strip() or "unknown"
+    except OSError:
+        sha = "unknown"
+    import jax
+
+    return {"git_sha": sha, "jax": jax.__version__,
+            "devices": jax.device_count(),
+            "platform": jax.default_backend()}
+
+
 def main() -> None:
     only = sys.argv[1:] or _MODULES
+    meta = _meta()
     all_rows, all_claims = [], {}
     for name in only:
         mod = __import__(f"benchmarks.{name}", fromlist=["run"])
@@ -44,15 +63,15 @@ def main() -> None:
             print(f"claim,{name}.{k},{v}", flush=True)
         with open(_artifact_path(name), "w") as f:
             json.dump({"suite": name, "elapsed_s": round(dt, 1),
-                       "rows": rows, "claims": claims}, f, indent=1,
-                      default=str)
+                       "meta": meta, "rows": rows, "claims": claims}, f,
+                      indent=1, default=str)
             f.write("\n")
         all_rows += rows
         all_claims.update({f"{name}.{k}": v for k, v in claims.items()})
     os.makedirs("results", exist_ok=True)
     with open("results/benchmarks.json", "w") as f:
-        json.dump({"rows": all_rows, "claims": all_claims}, f, indent=1,
-                  default=str)
+        json.dump({"meta": meta, "rows": all_rows, "claims": all_claims},
+                  f, indent=1, default=str)
     failed = [k for k, v in all_claims.items() if v is False]
     print(f"# claims: {sum(1 for v in all_claims.values() if v is True)} "
           f"hold, {len(failed)} failed: {failed}")

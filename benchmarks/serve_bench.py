@@ -1,25 +1,28 @@
-"""Serving bench: paged KV cache vs slot pool, exact vs mixed policy tiers.
+"""Serving bench: paged KV vs slot pool, policy tiers, preemption, sharding.
 
-Drives repro.serve.ServeEngine over a seeded Poisson arrival workload
-(with every third prompt repeated, so the prefix cache sees shared-prefix
-traffic) in three configurations at EQUAL KV memory (128 cells):
+Drives repro.serve.ServeEngine over seeded workloads in several
+configurations and backs the repo's serving claims:
 
-* ``slot``  — block_size == max_seq: one page per request, which is
-  exactly the old slot pool (2 slots x 64 tokens).
-* ``paged`` — 8 x 16-token pages with 4 decode rows: requests only
-  reserve the pages they can actually fill, so the same memory admits
-  more concurrent requests.
-* ``mixed`` — the paged engine serving two per-request policy tiers
-  (free = PC3_TR everywhere, paid = exact attention), batched into one
-  jit'd step per resolved policy.
+* ``slot`` / ``paged`` / ``mixed`` — equal KV memory (128 cells): the paged
+  pool completes identical tokens to the slot pool while sustaining
+  strictly higher peak concurrency; mixed-tier traffic batches per
+  resolved policy.
+* ``reserve`` vs ``preempt`` — same undersized pool: optimistic admission
+  with preemption/swap admits >= 2x the concurrent requests of
+  whole-lifetime reservation, token-identically.
+* ``async`` vs ``sync`` — same workload: the async tick loop (overlapping
+  host scheduling with the in-flight device step) spends a smaller
+  fraction of wall time blocked on device fetches than the synchronous
+  baseline (``ServeReport.host_idle_frac``).
+* ``multi_device`` — subprocess children at 1 vs 4 virtual CPU devices,
+  equal total KV memory: the 4-way tensor-parallel engine (sharded params,
+  KV pages, and decode step) emits identical tokens. The children run f32
+  compute so the row-parallel psum reorder (~1e-6) stays far below toy
+  logit gaps.
 
-Reports decode tokens/sec, p50/p99 TTFT and request latency, KV-pool
-utilization, peak concurrency, and prefix-cache hits. The headline claims:
-the paged pool completes identical tokens to the slot pool (the block
-table is a pure indexing change) while sustaining strictly higher peak
-concurrency from the same memory. Wall times on this CPU container measure
-*relative* overhead (the jnp bit-op backend is reference semantics, not a
-fast kernel); deployment numbers live in gemm_bench.py.
+Wall times on this CPU container measure *relative* overhead (the jnp
+bit-op backend is reference semantics, not a fast kernel); deployment
+numbers live in gemm_bench.py.
 
 Standalone:  PYTHONPATH=src python benchmarks/serve_bench.py [--arch A ...]
 Harness:     PYTHONPATH=src:. python benchmarks/run.py serve_bench
@@ -27,8 +30,92 @@ Harness:     PYTHONPATH=src:. python benchmarks/run.py serve_bench
 from __future__ import annotations
 
 import argparse
+import json
+import os
+import subprocess
+import sys
 
 TIERS = (("free", "*=pc3_tr"), ("paid", "*/attn/*=exact,*=pc3_tr"))
+
+_MULTIDEV_TIERS = (("free", "*=pc3_tr"), ("paid", "*=exact"))
+
+
+def _report_row(name, report, ecfg):
+    return {
+        "name": name,
+        "us_per_call": round(report.step_p50_ms * 1e3, 1),  # decode step
+        "tokens_per_s": round(report.tokens_per_s, 1),
+        "ttft_p50_ms": round(report.ttft_p50_ms, 1),
+        "ttft_p99_ms": round(report.ttft_p99_ms, 1),
+        "latency_p99_ms": round(report.latency_p99_ms, 1),
+        "kv_util_mean": round(report.kv_util_mean, 3),
+        "kv_util_peak": round(report.kv_util_peak, 3),
+        "peak_concurrency": report.peak_active_requests,
+        "prefix_hits": report.prefix_hits,
+        "policy_groups": report.policy_groups,
+        "kv_cells": ecfg.blocks * ecfg.block_size,
+        "host_idle_frac": round(report.host_idle_frac, 4),
+        "preemptions": report.preemptions,
+        "shards": report.shards,
+    }
+
+
+def _multidevice_child(devices: int) -> None:
+    """Child mode: serve a fixed mixed-tier Poisson workload on
+    ``devices`` virtual CPU devices (sharded when > 1) and print the
+    outputs + report numbers as JSON on stdout."""
+    os.environ["XLA_FLAGS"] = (
+        os.environ.get("XLA_FLAGS", "")
+        + f" --xla_force_host_platform_device_count={devices}")
+    import jax
+
+    from repro.configs import get_config
+    from repro.models.registry import build_model
+    from repro.serve import EngineConfig, ServeEngine, poisson_requests
+
+    cfg = get_config("tinyllama_1_1b").smoke(
+        n_layers=2, vocab=128, window=0, kv_heads=4,
+        compute_dtype="float32", param_dtype="float32")
+    model = build_model(cfg)
+    params, _ = model.init(jax.random.PRNGKey(0))
+    mesh = (jax.make_mesh((devices,), ("model",)) if devices > 1 else None)
+    # equal total KV memory across device counts: 16 x 8-token pages
+    ecfg = EngineConfig(num_slots=4, max_seq=48, block_size=8,
+                        num_blocks=16, prefill_chunk=8,
+                        tiers=_MULTIDEV_TIERS, shards=devices)
+    engine = ServeEngine(model, params, ecfg, mesh=mesh)
+    report = engine.run(poisson_requests(
+        8, cfg.vocab, rate=0.5, base_prompt=7, base_gen=10, seed=0,
+        tiers=[name for name, _ in _MULTIDEV_TIERS]))
+    print(json.dumps({
+        "devices": devices,
+        "shards": report.shards,
+        "outputs": {s.request_id: s.output for s in report.completed},
+        "row": _report_row(f"serve_multidevice_{devices}dev", report, ecfg),
+    }))
+
+
+def _run_multidevice() -> "tuple[list, dict]":
+    rows, outs = [], {}
+    for devices in (1, 4):
+        env = dict(os.environ)
+        proc = subprocess.run(
+            [sys.executable, os.path.abspath(__file__),
+             "--multidevice-child", str(devices)],
+            env=env, capture_output=True, text=True, timeout=560)
+        if proc.returncode:
+            raise RuntimeError(
+                f"multi-device child ({devices} devices) failed:\n"
+                + proc.stderr[-3000:])
+        payload = json.loads(proc.stdout.strip().splitlines()[-1])
+        rows.append(payload["row"])
+        outs[devices] = payload
+    claims = {
+        "multi_device_ran_4_shards": outs[4]["shards"] == 4,
+        "multi_device_tokens_identical":
+            outs[1]["outputs"] == outs[4]["outputs"],
+    }
+    return rows, claims
 
 
 def run(arch: str = "tinyllama_1_1b", requests: int = 10, rate: float = 0.5,
@@ -65,26 +152,61 @@ def run(arch: str = "tinyllama_1_1b", requests: int = 10, rate: float = 0.5,
         engine = ServeEngine(model, params, ecfg)
         report = engine.run(workload(tier_names))
         reports[label] = report
-        rows.append({
-            "name": f"serve_{arch}_{label}",
-            "us_per_call": round(report.step_p50_ms * 1e3, 1),  # decode step
-            "tokens_per_s": round(report.tokens_per_s, 1),
-            "ttft_p50_ms": round(report.ttft_p50_ms, 1),
-            "ttft_p99_ms": round(report.ttft_p99_ms, 1),
-            "latency_p99_ms": round(report.latency_p99_ms, 1),
-            "kv_util_mean": round(report.kv_util_mean, 3),
-            "kv_util_peak": round(report.kv_util_peak, 3),
-            "peak_concurrency": report.peak_active_requests,
-            "prefix_hits": report.prefix_hits,
-            "policy_groups": report.policy_groups,
-            "kv_cells": ecfg.blocks * ecfg.block_size,
-        })
+        rows.append(_report_row(f"serve_{arch}_{label}", report, ecfg))
+
+    # -- preemption/swap vs whole-lifetime reservation, same tiny pool ----
+    import numpy as np
+
+    rng = np.random.default_rng(21)
+    from repro.serve import Request
+
+    burst_prompts = [rng.integers(0, cfg.vocab, size=6).tolist()
+                     for _ in range(4)]
+
+    def burst():  # 1-page prompts growing to 3 pages, all arriving at once
+        return [Request(prompt=p, max_new_tokens=18) for p in burst_prompts]
+
+    for label, preempt in (("reserve", False), ("preempt", True)):
+        ecfg = EngineConfig(num_slots=4, max_seq=32, block_size=8,
+                            num_blocks=4, prefill_chunk=8, preempt=preempt)
+        report = ServeEngine(model, params, ecfg).run(burst())
+        reports[label] = report
+        rows.append(_report_row(f"serve_{arch}_{label}", report, ecfg))
+
+    # -- async tick loop vs synchronous baseline, same workload -----------
+    # a heavier smoke model so the per-step device compute outlasts jax's
+    # dispatch overhead: with the tiny default config the step finishes
+    # inside the launch call and there is nothing to overlap
+    heavy_cfg = get_config(arch).smoke(window=0, d_model=256, n_layers=4,
+                                       d_ff=1024, vocab=512)
+    heavy_model = build_model(heavy_cfg)
+    heavy_params, _ = heavy_model.init(jax.random.PRNGKey(0))
+    for label, overlap in (("async", True), ("sync", False)):
+        ecfg = EngineConfig(num_slots=4, max_seq=max_seq, block_size=16,
+                            num_blocks=2 * max_seq // 8, prefill_chunk=16,
+                            tiers=TIERS, overlap=overlap)
+        report = ServeEngine(heavy_model, heavy_params, ecfg).run(
+            poisson_requests(12, heavy_cfg.vocab, rate=rate,
+                             base_prompt=base_prompt, base_gen=base_gen,
+                             seed=0, tiers=[name for name, _ in TIERS]))
+        reports[label] = report
+        rows.append(_report_row(f"serve_{arch}_{label}", report, ecfg))
+
+    md_rows, md_claims = _run_multidevice()
+    rows += md_rows
+
     slot, paged, mixed = reports["slot"], reports["paged"], reports["mixed"]
     outputs = {label: [r.output for r in reports[label].completed]
-               for label in ("slot", "paged")}
+               for label in ("slot", "paged", "reserve", "preempt",
+                             "async", "sync")}
     claims = {
         "all_requests_complete": all(
-            len(r.completed) == requests for r in reports.values()),
+            len(reports[label].completed) == expect
+            for label, expect in (("slot", requests), ("paged", requests),
+                                  ("mixed", requests),
+                                  ("reserve", len(burst_prompts)),
+                                  ("preempt", len(burst_prompts)),
+                                  ("async", 12), ("sync", 12))),
         # block tables are a pure indexing change: same tokens out
         "paged_tokens_identical_to_slot": outputs["slot"] == outputs["paged"],
         # the headline: same 128 KV cells, strictly more requests in flight
@@ -95,6 +217,24 @@ def run(arch: str = "tinyllama_1_1b", requests: int = 10, rate: float = 0.5,
         "prefix_cache_hit_on_repeated_prompts": paged.prefix_hits >= 1,
         "mixed_tier_policy_groups": mixed.policy_groups,
         "mixed_tier_serves_two_groups": mixed.policy_groups == 2,
+        # preemption: same 4-page pool, >= 2x admitted concurrency,
+        # token-identical through the swap/resume cycle
+        "preemption_occurred": reports["preempt"].preemptions >= 1,
+        "preempt_tokens_identical_to_reserve":
+            outputs["reserve"] == outputs["preempt"],
+        "preempt_2x_admitted_concurrency":
+            reports["preempt"].peak_active_requests
+            >= 2 * reports["reserve"].peak_active_requests,
+        "reserve_peak_concurrency": reports["reserve"].peak_active_requests,
+        "preempt_peak_concurrency": reports["preempt"].peak_active_requests,
+        # async loop: same tokens, less wall time blocked on the device
+        "async_tokens_identical_to_sync":
+            outputs["async"] == outputs["sync"],
+        "async_idle_frac_below_sync":
+            reports["async"].host_idle_frac < reports["sync"].host_idle_frac,
+        "async_host_idle_frac": round(reports["async"].host_idle_frac, 4),
+        "sync_host_idle_frac": round(reports["sync"].host_idle_frac, 4),
+        **md_claims,
     }
     return rows, claims
 
@@ -107,7 +247,12 @@ if __name__ == "__main__":
     p.add_argument("--max-seq", type=int, default=64)
     p.add_argument("--prompt-len", type=int, default=20)
     p.add_argument("--gen", type=int, default=8)
+    p.add_argument("--multidevice-child", type=int, default=0,
+                   help=argparse.SUPPRESS)  # internal: subprocess mode
     args = p.parse_args()
+    if args.multidevice_child:
+        _multidevice_child(args.multidevice_child)
+        raise SystemExit(0)
     rows, claims = run(arch=args.arch, requests=args.requests,
                        rate=args.rate, max_seq=args.max_seq,
                        base_prompt=args.prompt_len, base_gen=args.gen)

@@ -26,6 +26,8 @@ SRV003   warning   KV pool oversubscribed vs expected concurrency
 SRV004   warning   two tiers resolve to the same policy group
 SRV005   error*    tier policy spec invalid for this model
 SRV006   info      model has no paged decode path; serving checks skipped
+SRV007   error*    KV pages / decode rows not divisible by mesh shards
+SRV008   warning   swap buffer smaller than one max-length request
 =======  ========  ====================================================
 
 ``error*`` codes downgrade to warnings in *advisory* mode (the ``--all``
@@ -345,6 +347,24 @@ def check_serving(graph: SiteGraph, engine_cfg=None, *,
                 f"tiers {names} resolve to the same policy group — they "
                 "share one jit'd step and one decode batch; merge them or "
                 "differentiate the specs", site=names[0]))
+    if engine_cfg.shards > 1 and (engine_cfg.blocks % engine_cfg.shards
+                                  or engine_cfg.num_slots % engine_cfg.shards):
+        findings.append(Finding(
+            "SRV007", _sev(advisory), "serving",
+            f"blocks={engine_cfg.blocks} / num_slots={engine_cfg.num_slots} "
+            f"not divisible by the mesh serving-axis size "
+            f"({engine_cfg.shards} shards): the Sharder's divisibility "
+            "fallback silently replicates the KV pool and decode batch "
+            "instead of sharding them — size both as multiples of shards"))
+    if (engine_cfg.preempt and engine_cfg.swap_blocks
+            and engine_cfg.swap_blocks < engine_cfg.max_blocks_per_seq):
+        findings.append(Finding(
+            "SRV008", "warning", "serving",
+            f"preemption enabled with swap_blocks={engine_cfg.swap_blocks} "
+            f"< one max-length request ({engine_cfg.max_blocks_per_seq} "
+            "pages): a long-running victim cannot be swapped out, so "
+            "exhaustion degrades to stalls; raise swap_blocks or leave it "
+            "0 (auto: one full request)"))
     return findings
 
 

@@ -24,7 +24,9 @@ def _engine_cfg(args):
     tiers = parse_tiers(args.tiers) if args.tiers else ()
     return EngineConfig(num_slots=args.slots, max_seq=args.max_seq,
                         block_size=args.block_size, num_blocks=args.blocks,
-                        prefill_chunk=args.prefill_chunk, tiers=tiers)
+                        prefill_chunk=args.prefill_chunk, tiers=tiers,
+                        shards=args.shards, preempt=args.preempt,
+                        swap_blocks=args.swap_blocks)
 
 
 def _lint_one(name, args, *, advisory):
@@ -69,6 +71,12 @@ def main(argv=None):
     p.add_argument("--block-size", type=int, default=16)
     p.add_argument("--blocks", type=int, default=0)
     p.add_argument("--prefill-chunk", type=int, default=16)
+    p.add_argument("--shards", type=int, default=1,
+                   help="mesh serving-axis size the engine is laid out for")
+    p.add_argument("--preempt", action="store_true",
+                   help="lint with preemption/swap admission enabled")
+    p.add_argument("--swap-blocks", type=int, default=0,
+                   help="host swap buffer pages (0 = one full request)")
     args = p.parse_args(argv)
     if bool(args.model) == args.all:
         p.error("exactly one of --model or --all is required")

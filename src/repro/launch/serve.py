@@ -70,6 +70,23 @@ def main(argv=None):
                    help="daism backend for approximate variants")
     p.add_argument("--seed", type=int, default=0)
     p.add_argument("--devices", type=int, default=0)
+    p.add_argument("--shards", type=int, default=1,
+                   help="tensor-parallel serving: shard params, KV pages "
+                        "and every policy group's step over an N-way "
+                        "'model' mesh axis (N must divide --blocks and "
+                        "--slots; pair with --devices N on CPU)")
+    p.add_argument("--preempt", action="store_true",
+                   help="optimistic admission + preemption: swap the "
+                        "lowest-priority running request's KV pages to a "
+                        "host buffer under pool exhaustion instead of "
+                        "reserving whole lifetimes up front")
+    p.add_argument("--swap-blocks", type=int, default=0,
+                   help="host swap buffer size in KV pages "
+                        "(0 = one full request's worth)")
+    p.add_argument("--sync", action="store_true",
+                   help="synchronous tick loop (disable the async "
+                        "host/device overlap; baseline for "
+                        "ServeReport.host_idle_frac)")
     p.add_argument("--no-preflight", action="store_true",
                    help="skip the daism-lint static preflight")
     args = p.parse_args(argv)
@@ -87,7 +104,12 @@ def main(argv=None):
 
     cfg = get_config(args.arch)
     if args.smoke:
-        cfg = cfg.smoke(window=0)  # paged pools need non-ring caches
+        overrides = {"window": 0}  # paged pools need non-ring caches
+        if args.shards > 1:
+            # the head-local paged attention shard_map needs kv heads
+            # divisible by the mesh axis; the default smoke config has 2
+            overrides["kv_heads"] = args.shards
+        cfg = cfg.smoke(**overrides)
     if args.policy:
         cfg = cfg.with_policy(args.policy)
     elif args.variant != "exact":
@@ -100,7 +122,9 @@ def main(argv=None):
     engine_cfg = EngineConfig(
         num_slots=args.slots, max_seq=args.max_seq,
         block_size=args.block_size, num_blocks=args.blocks,
-        prefill_chunk=args.prefill_chunk, tiers=tiers)
+        prefill_chunk=args.prefill_chunk, tiers=tiers,
+        shards=args.shards, preempt=args.preempt,
+        swap_blocks=args.swap_blocks, overlap=not args.sync)
     if not args.no_preflight:
         # static lint of the full (model, policy, engine) triple before the
         # (expensive) params init: bad tiers, window/paged conflicts and
@@ -111,7 +135,15 @@ def main(argv=None):
     model = build_model(cfg)
     params, _ = model.init(jax.random.PRNGKey(0))
 
-    engine = ServeEngine(model, params, engine_cfg)
+    mesh = None
+    if args.shards > 1:
+        if jax.device_count() % args.shards:
+            raise SystemExit(
+                f"--shards {args.shards} does not divide the "
+                f"{jax.device_count()} available devices (on CPU pass "
+                f"--devices {args.shards})")
+        mesh = jax.make_mesh((args.shards,), ("model",))
+    engine = ServeEngine(model, params, engine_cfg, mesh=mesh)
     tier_names = [name for name, _ in tiers]
     if args.poisson > 0:
         requests = poisson_requests(
@@ -141,6 +173,14 @@ def main(argv=None):
             print(f"step {ev['step']:4d}  admit  req {ev['request_id']} "
                   f"-> {ev['group']}/row {ev['slot']} "
                   f"[{ev['blocks']} pages{cached}]{joined}")
+        elif ev["event"] == "preempt":
+            print(f"step {ev['step']:4d}  preempt req {ev['request_id']} "
+                  f"({ev['group']}/row {ev['slot']}: {ev['blocks']} pages "
+                  "swapped to host)")
+        elif ev["event"] == "resume":
+            print(f"step {ev['step']:4d}  resume req {ev['request_id']} "
+                  f"-> {ev['group']}/row {ev['slot']} "
+                  f"[{ev['blocks']} pages restored]")
         else:
             print(f"step {ev['step']:4d}  retire req {ev['request_id']} "
                   f"({ev['group']}/row {ev['slot']} freed, {ev['reason']})")
@@ -171,6 +211,26 @@ def main(argv=None):
     if args.smoke and args.tiers:
         print(f"SMOKE-OK: {report.policy_groups} policy groups served "
               "mixed-tier traffic")
+    if args.smoke and args.shards > 1:
+        if report.shards != args.shards:
+            raise SystemExit(
+                f"smoke --shards {args.shards} ran on {report.shards} "
+                "shard(s)")
+        print(f"SMOKE-OK: served tensor-parallel over {report.shards} "
+              "shards")
+    if args.smoke and args.preempt and args.blocks:
+        # an explicitly undersized pool (--blocks) must actually exercise
+        # the swap path; auto-sized pools never exhaust
+        if not (report.preemptions and report.resumes):
+            raise SystemExit(
+                "smoke --preempt with a constrained pool must preempt and "
+                f"resume (got {report.preemptions} preemption(s), "
+                f"{report.resumes} resume(s))")
+        if any(s.finish_reason not in ("eos", "length")
+               for s in report.completed):
+            raise SystemExit("smoke --preempt: a request finished abnormally")
+        print(f"SMOKE-OK: {report.preemptions} preemption(s) / "
+              f"{report.resumes} resume(s) under page exhaustion")
 
 
 if __name__ == "__main__":

@@ -23,7 +23,7 @@ import jax.numpy as jnp
 import numpy as np
 from jax import lax
 
-from repro.parallel.sharding import constrain
+from repro.parallel.sharding import constrain, current_sharder
 from repro.parallel.unroll import unroll_for
 from repro.policy import OpKind, attention_kernel, policy_dot, resolve_site
 
@@ -227,6 +227,41 @@ def attend(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
     return out.transpose(0, 2, 1, 3).astype(q.dtype)  # (B, Sq, H, D)
 
 
+def _paged_kv_attend(q, k, v, ck, cv, widx, phys_read, positions, *,
+                     causal, window, chunk, softcap, unroll_category):
+    """Scatter new K/V into the physical page pool, gather each row's pages,
+    attend. Head-local by construction (no cross-head reduction), so it runs
+    unchanged as a shard_map body with q/k/v/pool split over the head dims —
+    the block-table gather/scatter stays on-shard."""
+    p_cells = ck.shape[0]
+    ck = ck.at[widx].set(k.astype(ck.dtype), mode="drop")
+    cv = cv.at[widx].set(v.astype(cv.dtype), mode="drop")
+    idx = jnp.minimum(phys_read, p_cells - 1)
+    gk = jnp.take(ck, idx, axis=0)  # (B, K, KH, HD)
+    gv = jnp.take(cv, idx, axis=0)
+    out = attend(q, gk, gv, positions, jnp.arange(gk.shape[1]),
+                 causal=causal, window=window, chunk=chunk, softcap=softcap,
+                 unroll_category=unroll_category)
+    return out, ck, cv
+
+
+def _paged_shard_axis(sharder, q_shape, pool_shape) -> Optional[str]:
+    """Mesh axis the paged-attention shard_map splits heads over, or None.
+
+    Eligible only when the sharder lands the *same single* mesh axis on
+    both the activation heads dim and the pool's kv_heads dim (its
+    divisibility fallback already dropped axes that do not divide, so an
+    indivisible head count degrades to the replicated GSPMD path rather
+    than an error)."""
+    if sharder is None:
+        return None
+    qspec = sharder.spec((None, None, "act_heads", None), q_shape)
+    pspec = sharder.spec((None, "act_kv_heads", None), pool_shape)
+    axq = qspec[2] if len(qspec) > 2 else None
+    axp = pspec[1] if len(pspec) > 1 else None
+    return axq if isinstance(axq, str) and axq == axp else None
+
+
 def self_attention(ctx: Ctx, x: jnp.ndarray, cfg: ArchConfig, *,
                    positions: jnp.ndarray, cache: Optional[dict] = None,
                    causal: bool = True, n_heads: int = 0, kv_heads: int = 0,
@@ -261,20 +296,33 @@ def self_attention(ctx: Ctx, x: jnp.ndarray, cfg: ArchConfig, *,
         #     0..K-1 (clipped gather; unmapped entries land beyond the
         #     row's write position, so the causal mask excludes them).
         ck, cv = cache["k"], cache["v"]
-        p_cells = ck.shape[0]
-        widx = cache["write_idx"]
-        ck = ck.at[widx].set(k.astype(ck.dtype), mode="drop")
-        cv = cv.at[widx].set(v.astype(cv.dtype), mode="drop")
+        widx, phys_read = cache["write_idx"], cache["phys_read"]
+        body = functools.partial(
+            _paged_kv_attend, causal=causal, window=cfg.window,
+            chunk=cfg.attn_chunk, softcap=cfg.logit_softcap,
+            unroll_category=unroll_category)
+        sharder = current_sharder()
+        ax = _paged_shard_axis(sharder, q.shape, ck.shape)
+        if ax is not None:
+            # tensor-parallel serving: shard_map over the head dims keeps
+            # every pool scatter/gather local to its shard; attend() is
+            # per-head so the body needs no collectives (GQA grouping is
+            # contiguous: q heads [j*nh/n, ...) read kv heads [j*kh/n, ...))
+            from jax.sharding import PartitionSpec as P
+
+            from repro.compat import shard_map
+
+            hspec = P(None, None, ax, None)
+            pspec = P(None, ax, None)
+            out, ck, cv = shard_map(
+                body, mesh=sharder.mesh,
+                in_specs=(hspec, hspec, hspec, pspec, pspec, P(), P(), P()),
+                out_specs=(hspec, pspec, pspec),
+                check_vma=False)(q, k, v, ck, cv, widx, phys_read, positions)
+        else:
+            out, ck, cv = body(q, k, v, ck, cv, widx, phys_read, positions)
         ck = constrain(ck, ("cache_seq", "act_kv_heads", None))
         cv = constrain(cv, ("cache_seq", "act_kv_heads", None))
-        idx = jnp.minimum(cache["phys_read"], p_cells - 1)
-        gk = jnp.take(ck, idx, axis=0)  # (B, K, KH, HD)
-        gv = jnp.take(cv, idx, axis=0)
-        kv_pos = jnp.arange(gk.shape[1])
-        out = attend(q, gk, gv, positions, kv_pos, causal=causal,
-                     window=cfg.window, chunk=cfg.attn_chunk,
-                     softcap=cfg.logit_softcap,
-                     unroll_category=unroll_category)
         out = out.reshape(b, s, nh * hd)
         out = dense(ctx, "wo", out, x.shape[-1], cfg, axes=("heads", "embed"),
                     use_bias=use_bias)

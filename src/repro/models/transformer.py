@@ -355,6 +355,15 @@ class DecoderLM:
                     "v": jax.ShapeDtypeStruct(kshape, dt)}
         return {"k": jnp.zeros(kshape, dt), "v": jnp.zeros(kshape, dt)}
 
+    @staticmethod
+    def paged_cache_axes():
+        """Logical axes of each paged-pool leaf (``init_paged_cache`` k/v)
+        for Sharder placement: layers and pool cells stay whole on every
+        device, kv heads split over the model axis — the same split the
+        paged attention shard_map uses, so block-table gather/scatter is
+        always shard-local (repro.serve tensor-parallel serving)."""
+        return ("layers", None, "act_kv_heads", None)
+
     def paged_step(self, params: Params, tokens: jnp.ndarray, cache, *,
                    block_size: int):
         """One fixed-shape step over block tables — decode (S=1) and chunked

@@ -1,49 +1,66 @@
-"""Synchronous continuous-batching engine over a paged KV cache with
-per-request approximation-policy tiers.
+"""Continuous-batching engine over a paged KV cache: async tick loop,
+tensor-parallel sharded steps, per-request policy tiers, preemption/swap.
 
-Design (replaces the PR 1 fixed-slot pool):
+Design (PR 1 slot pool -> PR 6 paged pool -> this: sharded + async):
 
 * **Paged KV pool** — one physical page pool for the whole engine:
   ``k/v: (layers, num_blocks * block_size, kv_heads, head_dim)`` with no
-  batch dimension. A request owns a *block table* (kv_pool.BlockPool):
-  ``ceil((prompt + gen - 1) / block_size)`` pages reserved at admission, so
-  short requests no longer pay for ``max_seq`` cells and concurrency is
-  bounded by pages, not preallocated rows. Full prompt blocks are
-  ref-counted and content-addressed: identical prompt prefixes under the
-  same policy share pages (prefix caching) and skip recompute. The old slot
-  pool is the degenerate ``block_size == max_seq`` configuration.
+  batch dimension. A request owns a *block table* (kv_pool.BlockPool);
+  full prompt blocks are ref-counted and content-addressed (prefix
+  caching). The old slot pool is the degenerate ``block_size == max_seq``
+  configuration.
 * **One jit'd step, block tables inside** — ``DecoderLM.paged_step``
   resolves block tables to gather/scatter indices *inside* the jit'd step:
-  decode (S=1) and chunked prefill (S=prefill_chunk) are two fixed shapes of
-  the same function, so admission/retirement and table growth never
+  decode (S=1) and chunked prefill (S=prefill_chunk) are two fixed shapes
+  of the same function, so admission/retirement and table growth never
   recompile.
-* **Chunked prefill** — prompts are ingested ``prefill_chunk`` tokens per
-  tick, interleaved with decode steps, so a long prompt no longer stalls
-  every running stream for its whole prefill; the chunk that reaches the
-  prompt's last token yields the first generated token (TTFT).
+* **Tensor-parallel sharding** — pass ``mesh=`` (with a ``model`` axis) and
+  the engine lays params out with the repo's serve Sharder rules, splits
+  the page pool's kv-heads dim over the same axis
+  (``DecoderLM.paged_cache_axes``), and traces every group step under the
+  sharder: the paged scatter/gather/attend runs as a head-local shard_map
+  (models/layers.py), so block-table traffic never crosses shards.
+  ``EngineConfig.shards`` documents the layout; blocks and num_slots must
+  divide by it (daism-lint SRV007) or GSPMD silently replicates the pool.
+* **Async tick loop** — each tick *launches* every group's prefill + decode
+  steps without blocking, then does the host-side work (arrival stamping,
+  admission + page reservation — step N+1's batch assembly) while the
+  device chews, and only then blocks on the token fetch. Fetch-blocked time
+  is accounted per run (``ServeReport.host_idle_frac``); ``overlap=False``
+  fetches immediately after each launch — the synchronous baseline the
+  idle-fraction claim in benchmarks/serve_bench.py is measured against.
+* **Preemption/swap** — ``preempt=True`` switches admission from
+  whole-lifetime page reservation to optimistic prompt-only allocation
+  with on-demand ``extend`` at every block boundary. Under page exhaustion
+  the engine swaps the lowest-priority (tie: youngest) *decoding* request
+  out to a host-side buffer — an exact gather of its pages — frees its
+  blocks and rows, and resumes it later token-identically (scatter back
+  through a fresh table; greedy decode continues from its last token).
+  The swap buffer holds at most ``swap_blocks`` pages (0 = one full
+  request, ``max_blocks_per_seq``); undersized buffers stall instead of
+  deadlocking (daism-lint SRV008 warns). Admission may preempt only
+  strictly-lower-priority victims; extension of a running request may
+  preempt equals (LIFO), so older requests finish.
 * **Policy groups** — each request carries an approximation policy (tier
   name from ``EngineConfig.tiers``, a raw spec, an ``ApproxPolicy``, or
   None = the base model's). Requests are batched *by resolved policy*: one
-  scheduler + one jit'd step per group (the policy is jit-static, PR 2), so
-  mixed free/paid traffic shares steps within a tier and never causes
-  cross-tier recompiles. All groups share the physical page pool and the
-  model params.
-* **Donated buffers** — each group's step donates the pool, which is
-  threaded sequentially through the groups' calls within a tick (in-place
-  updates; skipped on CPU where jax does not implement donation).
-* **Accounting** — per-request TTFT / latency, engine tok/s + step
-  percentiles, KV memory utilization (live tokens / pool cells) sampled
-  every tick, peak concurrency, and prefix-cache hits (ServeReport).
+  scheduler + one jit'd step per group; all groups share the physical page
+  pool and the model params.
+* **Accounting** — per-request TTFT / latency, inter-token gap
+  percentiles, engine tok/s + step percentiles, KV utilization, peak
+  concurrency, prefix-cache hits, preemptions/resumes, host idle time.
 
 Greedy (argmax) sampling: deterministic, so paged batched decode is
 token-identical to the single-request ``decode_step`` path — asserted in
-tests/test_serve.py, including under mixed per-request policies.
+tests/test_serve.py, including under mixed per-request policies and across
+a preempt/swap/resume cycle.
 """
 from __future__ import annotations
 
+import contextlib
 import dataclasses
 import time
-from typing import Any, Dict, List, Optional, Sequence, Tuple
+from typing import Any, Dict, List, Optional, Sequence, Set, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -52,7 +69,7 @@ import numpy as np
 from repro.policy import ApproxPolicy, parse_policy
 from repro.runtime.watchdog import StepWatchdog
 
-from .kv_pool import SENTINEL, BlockPool
+from .kv_pool import SENTINEL, BlockPool, blocks_needed
 from .scheduler import Request, RequestState, Scheduler
 
 
@@ -90,6 +107,13 @@ class EngineConfig:
     — the memory of the old slot pool. ``tiers`` registers named policy
     specs requests can reference (``Request.policy="free"``); see
     :func:`parse_tiers` for the CLI string form.
+
+    ``shards`` declares the mesh serving-axis (``model``) size the engine
+    is laid out for — pass the matching mesh to ``ServeEngine``; blocks
+    and num_slots must divide by it. ``preempt`` switches whole-lifetime
+    page reservation to optimistic allocation + swap-out under exhaustion
+    (``swap_blocks`` pages of host buffer, 0 = one full request).
+    ``overlap=False`` disables the async tick loop (synchronous baseline).
     """
 
     num_slots: int = 4          # decode rows per policy group
@@ -99,11 +123,16 @@ class EngineConfig:
     prefill_chunk: int = 16     # prompt tokens ingested per engine tick
     eos_id: Optional[int] = None    # default EOS for requests without one
     tiers: Tuple[Tuple[str, str], ...] = ()  # (name, policy spec) pairs
+    shards: int = 1             # mesh 'model'-axis size (tensor parallel)
+    preempt: bool = False       # optimistic admission + swap on exhaustion
+    swap_blocks: int = 0        # host swap buffer pages (0 = one request)
+    overlap: bool = True        # async tick loop (False = sync baseline)
 
     def __post_init__(self) -> None:
         # fail at construction with the field named, not as a shape error
         # three layers deep in a jit trace
-        for field in ("num_slots", "max_seq", "block_size", "prefill_chunk"):
+        for field in ("num_slots", "max_seq", "block_size", "prefill_chunk",
+                      "shards"):
             v = getattr(self, field)
             if not isinstance(v, int) or v < 1:
                 raise ValueError(
@@ -113,6 +142,10 @@ class EngineConfig:
             raise ValueError(
                 f"EngineConfig.num_blocks must be >= 0 "
                 f"(0 = auto; got {self.num_blocks})")
+        if self.swap_blocks < 0:
+            raise ValueError(
+                f"EngineConfig.swap_blocks must be >= 0 "
+                f"(0 = one request's worth; got {self.swap_blocks})")
         if self.max_seq % self.block_size:
             raise ValueError(
                 f"EngineConfig.max_seq ({self.max_seq}) must be a multiple "
@@ -159,6 +192,13 @@ class EngineConfig:
     def max_blocks_per_seq(self) -> int:
         return self.max_seq // self.block_size
 
+    @property
+    def swap_capacity(self) -> int:
+        """Host swap buffer size in pages (0 when preemption is off)."""
+        if not self.preempt:
+            return 0
+        return self.swap_blocks or self.max_blocks_per_seq
+
 
 @dataclasses.dataclass
 class ServeReport:
@@ -168,7 +208,10 @@ class ServeReport:
     prefill/decode steps are jit-compile-dominated, so small-workload p99
     (and early TTFT) measure compilation — warm the engine or discount the
     first steps when comparing kernels. The straggler counter already
-    excludes warmup (StepWatchdog)."""
+    excludes warmup (StepWatchdog). In async mode (``overlap=True``) step
+    times span launch -> fetch, so they include the overlapped host work;
+    ``host_idle_s`` counts only the time actually *blocked* on device
+    results — the number the async loop exists to shrink."""
 
     completed: List[RequestState]
     wall_s: float
@@ -178,19 +221,31 @@ class ServeReport:
     generated_tokens: int
     tokens_per_s: float
     ttft_p50_ms: float
+    ttft_p95_ms: float
     ttft_p99_ms: float
     latency_p50_ms: float
+    latency_p95_ms: float
     latency_p99_ms: float
+    tok_lat_p50_ms: float      # inter-token gap percentiles (per request)
+    tok_lat_p95_ms: float
+    tok_lat_p99_ms: float
     step_p50_ms: float
     step_p99_ms: float
     joined_mid_stream: int
     straggler_steps: int
+    # async tick-loop accounting
+    ticks: int                 # engine iterations driven
+    host_idle_s: float         # wall time blocked on device token fetches
+    host_idle_frac: float      # host_idle_s / wall_s
     # paged-KV accounting
     kv_util_mean: float        # live tokens / pool cells, mean over ticks
     kv_util_peak: float
     peak_active_requests: int  # max concurrent admitted requests
     prefix_hits: int           # prompt blocks adopted from the prefix cache
+    preemptions: int           # requests swapped out under page exhaustion
+    resumes: int               # swapped requests restored and continued
     policy_groups: int         # distinct resolved policies served
+    shards: int                # mesh serving-axis size (1 = single device)
     events: List[Dict[str, Any]]
 
     def summary(self) -> str:
@@ -202,13 +257,20 @@ class ServeReport:
             f"p50 {self.step_p50_ms:.2f} / p99 {self.step_p99_ms:.2f} ms"
             f" over {self.decode_steps} steps"
             f" ({self.straggler_steps} stragglers)",
-            f"TTFT p50 {self.ttft_p50_ms:.1f} / p99 {self.ttft_p99_ms:.1f} "
-            f"ms;  request latency p50 {self.latency_p50_ms:.1f} / p99 "
-            f"{self.latency_p99_ms:.1f} ms",
+            f"TTFT p50 {self.ttft_p50_ms:.1f} / p95 {self.ttft_p95_ms:.1f} "
+            f"/ p99 {self.ttft_p99_ms:.1f} ms;  request latency p50 "
+            f"{self.latency_p50_ms:.1f} / p95 {self.latency_p95_ms:.1f} / "
+            f"p99 {self.latency_p99_ms:.1f} ms",
+            f"inter-token p50 {self.tok_lat_p50_ms:.2f} / p95 "
+            f"{self.tok_lat_p95_ms:.2f} / p99 {self.tok_lat_p99_ms:.2f} ms",
+            f"host idle {self.host_idle_s * 1e3:.1f} ms "
+            f"({self.host_idle_frac * 100:.1f}% of wall) over {self.ticks} "
+            f"ticks;  {self.shards} shard(s)",
             f"KV util mean {self.kv_util_mean * 100:.1f}% / peak "
             f"{self.kv_util_peak * 100:.1f}%;  peak concurrency "
             f"{self.peak_active_requests};  {self.prefix_hits} prefix-cache "
             f"block hit(s);  {self.policy_groups} policy group(s)",
+            f"{self.preemptions} preemption(s) / {self.resumes} resume(s);  "
             f"{self.joined_mid_stream} request(s) joined the running batch "
             f"mid-stream (continuous batching)",
         ]
@@ -222,7 +284,7 @@ class _PolicyGroup:
     host-side metadata (block tables, write offsets, last tokens)."""
 
     def __init__(self, label: str, policy: Optional[ApproxPolicy], model,
-                 cfg: EngineConfig, donate: bool):
+                 cfg: EngineConfig, donate: bool, sharder=None):
         self.label = label
         self.policy = policy
         self.model = model
@@ -232,13 +294,23 @@ class _PolicyGroup:
         self.last_tok = np.zeros((cfg.num_slots,), np.int32)
         block_size = cfg.block_size
 
+        def scope():
+            if sharder is None:
+                return contextlib.nullcontext()
+            from repro.parallel.sharding import use_sharder
+            return use_sharder(sharder)
+
         def step(params, kv, tokens, tables, pos, last_idx):
-            cache = dict(kv, block_tables=tables, pos=pos)
-            logits, new_kv = model.paged_step(params, tokens, cache,
-                                              block_size=block_size)
-            last = jnp.take_along_axis(logits, last_idx[:, None, None],
-                                       axis=1)  # (R, 1, V) at true length
-            return jnp.argmax(last[:, 0, :], -1), new_kv
+            # traced under the engine's sharder (when meshed) so the paged
+            # attention takes the head-local shard_map path and every
+            # constrain() in the layer stack sees the mesh
+            with scope():
+                cache = dict(kv, block_tables=tables, pos=pos)
+                logits, new_kv = model.paged_step(params, tokens, cache,
+                                                  block_size=block_size)
+                last = jnp.take_along_axis(logits, last_idx[:, None, None],
+                                           axis=1)  # (R, 1, V) at true length
+                return jnp.argmax(last[:, 0, :], -1), new_kv
 
         self.step_fn = jax.jit(step, donate_argnums=(1,) if donate else ())
 
@@ -254,10 +326,17 @@ class _PolicyGroup:
 
 class ServeEngine:
     """Drives a DecoderLM-style model (init_paged_cache / paged_step)
-    through paged continuous-batching generation. Synchronous: ``run``
-    blocks until every submitted request completes."""
+    through paged continuous-batching generation, optionally sharded over
+    ``mesh`` (tensor-parallel serving: pass a mesh with a ``model`` axis
+    matching ``cfg.shards``). ``run`` blocks until every submitted request
+    completes; the tick loop itself overlaps host scheduling with the
+    in-flight device step unless ``cfg.overlap`` is False."""
 
-    def __init__(self, model, params, cfg: EngineConfig):
+    # ticks with active/arrived work but no launches and no admissions
+    # before the engine declares a livelock (undersized swap buffer)
+    _STUCK_TICKS = 1000
+
+    def __init__(self, model, params, cfg: EngineConfig, mesh=None):
         if not hasattr(model, "paged_step"):
             raise TypeError(
                 f"{type(model).__name__} has no paged_step(); the serving "
@@ -265,27 +344,94 @@ class ServeEngine:
         if hasattr(model, "cfg"):
             cfg.validate_for_model(model.cfg)
         self.model = model
-        self.params = params
         self.cfg = cfg
+        self.mesh = mesh
+        self.shards = 1
+        self.sharder = None
+        if mesh is not None and "model" in mesh.axis_names:
+            self.shards = int(mesh.shape["model"])
+        if cfg.shards > 1 and self.shards != cfg.shards:
+            have = (f"a {self.shards}-way 'model' axis" if mesh is not None
+                    else "no mesh")
+            raise ValueError(
+                f"EngineConfig.shards={cfg.shards} but the engine got "
+                f"{have}; pass ServeEngine(..., mesh=...) with a matching "
+                "'model' mesh axis")
+        if self.shards > 1 and (cfg.blocks % self.shards
+                                or cfg.num_slots % self.shards):
+            raise ValueError(
+                f"EngineConfig: blocks={cfg.blocks} and num_slots="
+                f"{cfg.num_slots} must both be divisible by the mesh "
+                f"serving-axis size ({self.shards}): uneven banks make "
+                "GSPMD silently replicate the pool instead of sharding it "
+                "(daism-lint SRV007)")
         self.pool = BlockPool(cfg.blocks, cfg.block_size)
         self.kv = model.init_paged_cache(cfg.blocks, cfg.block_size)
         # donation: in-place pool updates (not implemented on CPU — jax
         # would warn and copy anyway)
         self._donate = jax.default_backend() != "cpu"
+        if mesh is not None:
+            from repro.models.module import axes_tree
+            from repro.parallel.sharding import (Sharder, base_rules,
+                                                 tree_shardings, use_sharder)
+            self.sharder = Sharder(
+                mesh, base_rules("pod" in mesh.axis_names, serve=True))
+            with use_sharder(self.sharder):
+                shapes, axes = model.init(jax.random.PRNGKey(0),
+                                          abstract=True)
+            shardings = tree_shardings(self.sharder, shapes,
+                                       axes_tree(shapes, axes))
+            params = jax.device_put(params, shardings)
+            pool_axes = getattr(model, "paged_cache_axes",
+                                lambda: ("layers", None, "act_kv_heads",
+                                         None))()
+            self.kv = {
+                n: jax.device_put(a, self.sharder.sharding(pool_axes,
+                                                           a.shape))
+                for n, a in self.kv.items()}
+        self.params = params
         self._tiers: Dict[str, ApproxPolicy] = {
             name: parse_policy(spec, name=name) for name, spec in cfg.tiers}
         self.groups: Dict[Optional[ApproxPolicy], _PolicyGroup] = {}
         self._pending_alloc: Dict[int, Tuple[List[int], int]] = {}
         self._next_id = 0
 
+        # fixed-shape swap steps (preemption): exact page gather/scatter
+        cells = cfg.blocks * cfg.block_size
+        bs = cfg.block_size
+
+        def _swap_idx(table):
+            base = jnp.where(table < 0, cells, table * bs)
+            return (base[:, None] + jnp.arange(bs)).reshape(-1)
+
+        def swap_out(kv, table):  # table (MB,) int32, SENTINEL-padded
+            idx = jnp.minimum(_swap_idx(table), cells - 1)
+            return (jnp.take(kv["k"], idx, axis=1),
+                    jnp.take(kv["v"], idx, axis=1))
+
+        def swap_in(kv, table, k, v):  # unmapped entries >= cells: dropped
+            idx = _swap_idx(table)
+            return dict(kv,
+                        k=kv["k"].at[:, idx].set(k, mode="drop"),
+                        v=kv["v"].at[:, idx].set(v, mode="drop"))
+
+        self._swap_out = jax.jit(swap_out)
+        self._swap_in = jax.jit(swap_in)
+        self._swapped_blocks = 0
+
         self.step = 0
         self.events: List[Dict[str, Any]] = []
         self.watchdog = StepWatchdog()
         self._step_times: List[float] = []
         self._prefill_s = 0.0
+        self._idle_s = 0.0
+        self._tok_gaps: List[float] = []
         self._util_samples: List[float] = []
         self._util_peak = 0.0
         self._peak_active = 0
+        self._preemptions = 0
+        self._resumes = 0
+        self._stuck_ticks = 0
 
     # -- numerics policy ---------------------------------------------------
 
@@ -334,7 +480,8 @@ class ServeEngine:
                 from repro.models.registry import build_model
 
                 model = build_model(self.model.cfg.with_policy(policy))
-            group = _PolicyGroup(label, key, model, self.cfg, self._donate)
+            group = _PolicyGroup(label, key, model, self.cfg, self._donate,
+                                 self.sharder)
             self.groups[key] = group
         return group
 
@@ -365,13 +512,31 @@ class ServeEngine:
                                 request_id=state.request_id,
                                 slot=slot, group=state.group, **kw))
 
-    def _try_reserve(self, group: _PolicyGroup, state: RequestState) -> bool:
-        """Admission gate: reserve the request's whole-lifetime KV pages
-        (prompt + gen - 1 positions — the final token is never written).
-        Reserving up front means an admitted request can always finish."""
-        total = len(state.request.prompt) + state.request.max_new_tokens - 1
-        alloc = self.pool.allocate(state.request_id, state.request.prompt,
-                                   max(total, 1), policy_key=group.policy)
+    def _try_reserve(self, group: _PolicyGroup, state: RequestState,
+                     allow_preempt: bool = False) -> bool:
+        """Admission gate. Reservation policy depends on the engine mode:
+        whole lifetime (prompt + gen - 1; an admitted request can always
+        finish) by default, prompt-only when preemption is on (optimistic —
+        decode extends on demand and swaps victims out under exhaustion),
+        written-length for a resuming swapped request. With
+        ``allow_preempt``, strictly-lower-priority running requests are
+        swapped out to make room."""
+        req = state.request
+        if state.swap is not None:
+            total = state.seq_len        # resume: cover what was written
+        elif self.cfg.preempt:
+            total = len(req.prompt)      # optimistic: prompt only
+        else:
+            total = len(req.prompt) + req.max_new_tokens - 1
+        args = (state.request_id, req.prompt, max(total, 1))
+        alloc = self.pool.allocate(*args, policy_key=group.policy)
+        while alloc is None and allow_preempt:
+            victim = self._pick_victim(exclude_id=state.request_id,
+                                       max_priority=req.priority)
+            if victim is None:
+                break
+            self._preempt(*victim)
+            alloc = self.pool.allocate(*args, policy_key=group.policy)
         if alloc is None:
             return False
         self._pending_alloc[state.request_id] = alloc
@@ -382,6 +547,9 @@ class ServeEngine:
             table, cached_len = self._pending_alloc.pop(state.request_id)
             group.tables[state.slot] = SENTINEL
             group.tables[state.slot, :len(table)] = table
+            if state.swap is not None:
+                self._swap_restore(group, state, table)
+                continue
             state.next_pos = cached_len
             state.cached_len = cached_len
             self._event("admit", state, state.slot,
@@ -389,8 +557,98 @@ class ServeEngine:
                         blocks=len(table),
                         cached_blocks=cached_len // self.cfg.block_size)
 
+    # -- preemption / swap -------------------------------------------------
+
+    def _pick_victim(self, exclude_id: Optional[int] = None,
+                     max_priority: Optional[int] = None):
+        """Lowest-priority (tie: youngest admission) *decoding* request
+        whose pages fit in the remaining swap buffer. Prefilling rows are
+        never preempted — their pages are mid-write. Returns
+        ``(group, slot, state)`` or None."""
+        best = None
+        free_swap = self.cfg.swap_capacity - self._swapped_blocks
+        for group in self.groups.values():
+            for slot, st in group.sched.active.items():
+                if st.prefilling or st.request_id == exclude_id:
+                    continue
+                if (max_priority is not None
+                        and st.request.priority >= max_priority):
+                    continue
+                if blocks_needed(st.seq_len,
+                                 self.cfg.block_size) > free_swap:
+                    continue
+                key = (st.request.priority, -st.admit_step, -st.request_id)
+                if best is None or key < best[0]:
+                    best = (key, group, slot, st)
+        return None if best is None else best[1:]
+
+    def _preempt(self, group: _PolicyGroup, slot: int, state: RequestState):
+        """Swap ``state`` out: exact gather of its written pages into the
+        host buffer, then free its blocks and decode row. Only called while
+        no device step is in flight (launch phase / post-apply admission),
+        so ``self.kv`` is the settled pool."""
+        n_blocks = blocks_needed(state.seq_len, self.cfg.block_size)
+        table = np.full((self.cfg.max_blocks_per_seq,), SENTINEL, np.int32)
+        table[:n_blocks] = group.tables[slot, :n_blocks]
+        k, v = self._swap_out(self.kv, jnp.asarray(table))
+        state.swap = {"k": np.asarray(k), "v": np.asarray(v),
+                      "blocks": n_blocks}
+        self._swapped_blocks += n_blocks
+        self.pool.free(state.request_id)
+        group.sched.requeue(slot)
+        group.tables[slot] = SENTINEL
+        self._preemptions += 1
+        self._event("preempt", state, slot, blocks=n_blocks)
+
+    def _swap_restore(self, group: _PolicyGroup, state: RequestState,
+                      table: List[int]):
+        """Scatter a resuming request's swapped pages through its fresh
+        block table — bit-exact restore, so greedy decode continues
+        token-identically from its last emitted token."""
+        swap, state.swap = state.swap, None
+        n_old = swap["blocks"]
+        self._swapped_blocks -= n_old
+        # only the written blocks are restored; any extra freshly-allocated
+        # blocks cover future positions and are written by decode itself
+        t = np.full((self.cfg.max_blocks_per_seq,), SENTINEL, np.int32)
+        t[:n_old] = table[:n_old]
+        self.kv = self._swap_in(self.kv, jnp.asarray(t),
+                                jnp.asarray(swap["k"]),
+                                jnp.asarray(swap["v"]))
+        self.pool.advance(state.request_id, state.seq_len)
+        self.pool.commit_prefix(state.request_id)
+        group.last_tok[state.slot] = state.output[-1]
+        self._resumes += 1
+        self._event("resume", state, state.slot, blocks=len(table))
+
+    def _ensure_blocks(self, group: _PolicyGroup,
+                       state: RequestState) -> bool:
+        """Grow the row's table to cover its next token write (a no-op
+        inside the reservation); under preemption, swap victims out on
+        exhaustion. False = the row stalls this tick (no decode step)."""
+        need = state.seq_len + 1
+        table = self.pool.extend(state.request_id, need)
+        while table is None and self.cfg.preempt:
+            victim = self._pick_victim(exclude_id=state.request_id)
+            if victim is None:
+                return False
+            self._preempt(*victim)
+            table = self.pool.extend(state.request_id, need)
+        if table is None:
+            return False
+        group.tables[state.slot, :len(table)] = table
+        return True
+
+    # -- token bookkeeping -------------------------------------------------
+
     def _append_token(self, group: _PolicyGroup, state: RequestState,
                       token: int):
+        now = time.perf_counter()
+        if state.last_token_time:
+            gap = now - state.last_token_time
+            state.token_gaps_s.append(gap)
+            self._tok_gaps.append(gap)
+        state.last_token_time = now
         state.output.append(token)
         group.last_tok[state.slot] = token
         reason = ""
@@ -400,20 +658,21 @@ class ServeEngine:
             reason = "length"
         if reason:
             slot = state.slot  # retire() resets it; event wants the real one
-            group.sched.retire(slot, reason, self.step,
-                               now=time.perf_counter())
+            group.sched.retire(slot, reason, self.step, now=now)
             group.tables[slot] = SENTINEL
             self.pool.free(state.request_id)
             self._event("retire", state, slot, reason=reason)
 
-    def _run_prefill(self, group: _PolicyGroup):
-        """One prefill chunk for every row of ``group`` still ingesting its
-        prompt; rows that reach the last prompt token emit their first
-        generated token. Decode rows are masked out (sentinel tables) so
-        their K/V is untouched."""
+    # -- launch / fetch / apply (async tick phases) --------------------------
+
+    def _launch_prefill(self, group: _PolicyGroup) -> Optional[dict]:
+        """Dispatch one prefill chunk for every row of ``group`` still
+        ingesting its prompt (no host sync); rows reaching the last prompt
+        token emit their first generated token at apply time. Decode rows
+        are masked out (sentinel tables) so their K/V is untouched."""
         rows = group.prefill_rows
         if not rows:
-            return
+            return None
         cfg = self.cfg
         chunk = cfg.prefill_chunk
         r = cfg.num_slots
@@ -421,7 +680,7 @@ class ServeEngine:
         tables = np.full_like(group.tables, SENTINEL)
         pos = np.zeros((r,), np.int32)
         last_idx = np.zeros((r,), np.int32)
-        finishing: Dict[int, RequestState] = {}
+        finishing: Set[int] = set()
         for slot, state in rows.items():
             prompt = state.request.prompt
             piece = prompt[state.next_pos:state.next_pos + chunk]
@@ -430,31 +689,23 @@ class ServeEngine:
             pos[slot] = state.next_pos
             last_idx[slot] = len(piece) - 1
             if state.next_pos + len(piece) == len(prompt):
-                finishing[slot] = state
+                finishing.add(slot)
             state.next_pos += len(piece)
         t0 = time.perf_counter()
         tok, self.kv = group.step_fn(
             self.params, self.kv, jnp.asarray(tokens), jnp.asarray(tables),
             jnp.asarray(pos), jnp.asarray(last_idx))
-        tok = np.asarray(tok)  # blocks; prefill wall time is honest
-        dt = time.perf_counter() - t0
-        self._prefill_s += dt
-        now = time.perf_counter()
-        for slot, state in rows.items():
-            state.prefill_s += dt
-            if slot in finishing:
-                state.first_token_time = now
-                self.pool.commit_prefix(state.request_id)
-                self._append_token(group, state, int(tok[slot]))
-            if state.request_id in self.pool:
-                self.pool.advance(state.request_id, state.seq_len)
+        return {"group": group, "kind": "prefill", "rows": rows,
+                "finishing": finishing, "tok": tok, "t0": t0}
 
-    def _run_decode(self, group: _PolicyGroup):
-        """One decode token for every generating row of ``group``; prefill
-        and idle rows are masked out (sentinel tables)."""
-        rows = group.decode_rows
+    def _launch_decode(self, group: _PolicyGroup,
+                       stalled: Set[int]) -> Optional[dict]:
+        """Dispatch one decode token for every generating row of ``group``
+        (no host sync); prefill, stalled, and idle rows are masked out."""
+        rows = {s: st for s, st in group.decode_rows.items()
+                if st.request_id not in stalled}
         if not rows:
-            return
+            return None
         r = self.cfg.num_slots
         tables = np.full_like(group.tables, SENTINEL)
         pos = np.zeros((r,), np.int32)
@@ -466,42 +717,134 @@ class ServeEngine:
             self.params, self.kv, jnp.asarray(group.last_tok[:, None]),
             jnp.asarray(tables), jnp.asarray(pos),
             jnp.zeros((r,), jnp.int32))
-        tok = np.asarray(tok)  # host sync: scheduler needs tokens
-        dt = time.perf_counter() - t0
-        self._step_times.append(dt)
-        self.watchdog.observe(dt)
-        for slot, state in list(rows.items()):
-            self._append_token(group, state, int(tok[slot]))
-            if state.request_id in self.pool:
-                self.pool.advance(state.request_id, state.seq_len)
+        return {"group": group, "kind": "decode", "rows": rows,
+                "tok": tok, "t0": t0}
 
-    def tick(self) -> bool:
-        """One engine iteration: admit -> one prefill chunk per ingesting
-        row -> one decode token per generating row, per policy group.
-        Returns False when fully drained."""
-        if not any(g.sched.has_work for g in self.groups.values()):
-            return False
-        now = time.perf_counter()
+    def _fetch(self, rec: dict):
+        """Block on a launched step's token array — the only host wait in
+        the loop; the blocked time is the tick's idle accounting."""
+        if "np_tok" in rec:
+            return
+        t0 = time.perf_counter()
+        rec["np_tok"] = np.asarray(rec["tok"])
+        t1 = time.perf_counter()
+        self._idle_s += t1 - t0
+        rec["dt"] = t1 - rec["t0"]
+
+    def _apply(self, rec: dict):
+        """Fold a fetched step's tokens back into scheduler/pool state."""
+        group, rows, tok = rec["group"], rec["rows"], rec["np_tok"]
+        dt = rec["dt"]
+        if rec["kind"] == "prefill":
+            self._prefill_s += dt
+            now = time.perf_counter()
+            for slot, state in rows.items():
+                state.prefill_s += dt
+                if slot in rec["finishing"]:
+                    state.first_token_time = now
+                    self.pool.commit_prefix(state.request_id)
+                    self._append_token(group, state, int(tok[slot]))
+                if state.request_id in self.pool:
+                    self.pool.advance(state.request_id, state.seq_len)
+        else:
+            self._step_times.append(dt)
+            self.watchdog.observe(dt)
+            for slot, state in list(rows.items()):
+                self._append_token(group, state, int(tok[slot]))
+                if state.request_id in self.pool:
+                    self.pool.advance(state.request_id, state.seq_len)
+
+    # -- tick loop -----------------------------------------------------------
+
+    def _stamp_arrivals(self, now: float):
         for group in self.groups.values():
             for waiting in group.sched.waiting:  # trace replay: stamp arrival
                 if (waiting.arrival_time == 0.0
                         and waiting.request.arrival_step <= self.step):
                     waiting.arrival_time = now
+
+    def _admit_all(self, allow_preempt: bool) -> bool:
+        any_admitted = False
+        for group in self.groups.values():
             admitted = group.sched.admit(
                 self.step,
-                can_admit=lambda st, g=group: self._try_reserve(g, st))
+                can_admit=lambda st, g=group: self._try_reserve(
+                    g, st, allow_preempt))
             if admitted:
                 self._admit(group, admitted)
-        for group in self.groups.values():
-            self._run_prefill(group)
-        for group in self.groups.values():
-            self._run_decode(group)
+                any_admitted = True
+        return any_admitted
+
+    def _sample_util(self):
         active = sum(len(g.sched.active) for g in self.groups.values())
-        self._peak_active = max(self._peak_active, active)
         if active:
             util = self.pool.utilization()["pool_util"]
             self._util_samples.append(util)
             self._util_peak = max(self._util_peak, util)
+
+    def tick(self) -> bool:
+        """One engine iteration, in phases:
+
+        0. grow decode tables for this tick's writes (may preempt/swap);
+        1. *launch* every group's prefill chunk + decode step — no host
+           sync (``overlap=False``: fetch immediately, the sync baseline);
+        2. overlapped host work while the device runs: arrival stamping,
+           admission + page reservation (next tick's batch assembly),
+           utilization sampling;
+        3. blocking token fetch, then fold tokens into scheduler state;
+        4. post-retirement admission (pages just freed; preemption/resume
+           allowed here — nothing is in flight).
+
+        Returns False when fully drained."""
+        if not any(g.sched.has_work for g in self.groups.values()):
+            return False
+        stalled: Set[int] = set()
+        for group in self.groups.values():
+            for _slot, state in list(group.decode_rows.items()):
+                if state.request_id not in self.pool:
+                    continue  # preempted as a victim earlier this phase
+                if not self._ensure_blocks(group, state):
+                    stalled.add(state.request_id)
+        inflight = []
+        for group in self.groups.values():
+            rec = self._launch_prefill(group)
+            if rec is not None:
+                inflight.append(rec)
+                if not self.cfg.overlap:
+                    self._fetch(rec)
+        for group in self.groups.values():
+            rec = self._launch_decode(group, stalled)
+            if rec is not None:
+                inflight.append(rec)
+                if not self.cfg.overlap:
+                    self._fetch(rec)
+        now = time.perf_counter()
+        self._stamp_arrivals(now)
+        admitted = self._admit_all(allow_preempt=False)
+        self._sample_util()
+        for rec in inflight:
+            # fetch+apply interleaved: applying an earlier record's host
+            # bookkeeping (token append, prefix commit, retirement) runs
+            # while later records are still computing on the device
+            self._fetch(rec)
+            self._apply(rec)
+        admitted |= self._admit_all(allow_preempt=self.cfg.preempt)
+        self._peak_active = max(
+            self._peak_active,
+            sum(len(g.sched.active) for g in self.groups.values()))
+        arrived_waiting = any(
+            st.request.arrival_step <= self.step
+            for g in self.groups.values() for st in g.sched.waiting)
+        if inflight or admitted or not arrived_waiting:
+            self._stuck_ticks = 0
+        else:
+            self._stuck_ticks += 1
+            if self._stuck_ticks >= self._STUCK_TICKS:
+                raise RuntimeError(
+                    f"serving livelock: {self._stuck_ticks} ticks with "
+                    "waiting work but no progress — the KV pool and swap "
+                    "buffer together cannot host any runnable request "
+                    "(undersized swap_blocks? see daism-lint SRV008)")
         self.step += 1
         return any(g.sched.has_work for g in self.groups.values())
 
@@ -528,6 +871,7 @@ class ServeEngine:
         decode_s = float(sum(self._step_times))
         # prefill produces 1 token/request; the rest ride decode steps
         decode_tokens = generated - len(done)
+        gaps_ms = [g * 1e3 for g in self._tok_gaps]
         return ServeReport(
             completed=done,
             wall_s=wall,
@@ -537,18 +881,29 @@ class ServeEngine:
             generated_tokens=generated,
             tokens_per_s=decode_tokens / decode_s if decode_s else 0.0,
             ttft_p50_ms=_pct([s.ttft_s * 1e3 for s in done], 50),
+            ttft_p95_ms=_pct([s.ttft_s * 1e3 for s in done], 95),
             ttft_p99_ms=_pct([s.ttft_s * 1e3 for s in done], 99),
             latency_p50_ms=_pct([s.latency_s * 1e3 for s in done], 50),
+            latency_p95_ms=_pct([s.latency_s * 1e3 for s in done], 95),
             latency_p99_ms=_pct([s.latency_s * 1e3 for s in done], 99),
+            tok_lat_p50_ms=_pct(gaps_ms, 50),
+            tok_lat_p95_ms=_pct(gaps_ms, 95),
+            tok_lat_p99_ms=_pct(gaps_ms, 99),
             step_p50_ms=_pct([t * 1e3 for t in self._step_times], 50),
             step_p99_ms=_pct([t * 1e3 for t in self._step_times], 99),
             joined_mid_stream=sum(s.joined_running_batch for s in done),
             straggler_steps=self.watchdog.stragglers,
+            ticks=self.step,
+            host_idle_s=self._idle_s,
+            host_idle_frac=self._idle_s / wall if wall else 0.0,
             kv_util_mean=(float(np.mean(self._util_samples))
                           if self._util_samples else 0.0),
             kv_util_peak=self._util_peak,
             peak_active_requests=self._peak_active,
             prefix_hits=self.pool.prefix_hits,
+            preemptions=self._preemptions,
+            resumes=self._resumes,
             policy_groups=len(self.groups),
+            shards=self.shards,
             events=self.events,
         )

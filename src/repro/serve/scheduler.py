@@ -1,4 +1,4 @@
-"""Continuous-batching request scheduler: FCFS over fixed decode rows.
+"""Continuous-batching request scheduler: priority + FCFS over decode rows.
 
 Iteration-level scheduling (Orca / vLLM style) without async machinery:
 the engine runs one batched step at a time; between steps the scheduler
@@ -10,6 +10,12 @@ in the paged block pool (kv_pool.py), so admission is additionally gated by
 an optional ``can_admit`` callback (page reservation). The engine runs one
 Scheduler per resolved approximation policy: requests batch with their tier
 and never force a cross-tier recompile.
+
+Admission is priority-then-FCFS: the highest ``Request.priority`` among
+arrived waiters wins each free row (ties resolve in queue order, so equal
+priorities reproduce the original FCFS behavior exactly). A preempted
+request re-enters the queue at the *front* (``requeue``), so it resumes
+before equal-priority newcomers.
 """
 from __future__ import annotations
 
@@ -28,13 +34,18 @@ class Request:
     (the engine's base model policy), a tier name registered in
     ``EngineConfig.tiers`` (e.g. ``"free"``), a raw policy spec string
     (``"*/attn/*=exact,*=pc3_tr"``), or an ``ApproxPolicy``. Requests with
-    the same *resolved* policy share jit'd steps (one policy group each)."""
+    the same *resolved* policy share jit'd steps (one policy group each).
+
+    ``priority`` orders admission (higher wins; equal = FCFS) and shields a
+    request from preemption: under page exhaustion the engine swaps out the
+    lowest-priority running request first."""
 
     prompt: List[int]
     max_new_tokens: int
     eos_id: Optional[int] = None
     arrival_step: int = 0
     policy: Union[None, str, "object"] = None  # name | spec | ApproxPolicy
+    priority: int = 0
 
 
 @dataclasses.dataclass
@@ -66,6 +77,12 @@ class RequestState:
     first_token_time: float = 0.0
     finish_time: float = 0.0
     prefill_s: float = 0.0  # wall time of the prefill chunks it rode in
+    last_token_time: float = 0.0   # stamp of the latest emitted token
+    token_gaps_s: List[float] = dataclasses.field(default_factory=list)
+    # preemption/swap bookkeeping (engine-owned): ``swap`` holds the
+    # host-side K/V snapshot + table length while the request is evicted
+    preemptions: int = 0
+    swap: Optional[dict] = None
 
     @property
     def ttft_s(self) -> float:
@@ -118,30 +135,46 @@ class Scheduler:
               can_admit: Optional[Callable[[RequestState], bool]] = None
               ) -> List[RequestState]:
         """Bind waiting requests (whose arrival time has come) to free
-        rows — FCFS among the arrived; an unarrived request does not block
-        arrived ones queued behind it. ``can_admit`` gates each admission on
-        external resources (KV page reservation): when it refuses, admission
-        stops — FCFS blocking, so a large request is not starved by smaller
-        ones slipping past it. Returns the newly admitted states; the caller
-        must start their prefill before the next decode step."""
+        rows — highest priority first, FCFS among equals; an unarrived
+        request does not block arrived ones queued behind it. ``can_admit``
+        gates each admission on external resources (KV page reservation):
+        when the chosen candidate is refused, admission stops — strict
+        blocking, so a large or high-priority request is not starved by
+        smaller ones slipping past it. Returns the newly admitted states;
+        the caller must start their prefill before the next decode step."""
         admitted: List[RequestState] = []
         running = bool(self.active)
-        not_yet_arrived: List[RequestState] = []
-        while self._free and self.waiting:
-            state = self.waiting.popleft()
-            if state.request.arrival_step > step:
-                not_yet_arrived.append(state)
-                continue
-            if can_admit is not None and not can_admit(state):
-                self.waiting.appendleft(state)  # blocked on memory: FCFS
+        while self._free:
+            best = -1
+            for i, st in enumerate(self.waiting):
+                if st.request.arrival_step > step:
+                    continue
+                if (best < 0 or st.request.priority
+                        > self.waiting[best].request.priority):
+                    best = i  # strict '>' keeps FCFS order among equals
+            if best < 0:
                 break
+            state = self.waiting[best]
+            if can_admit is not None and not can_admit(state):
+                break  # blocked on memory: nothing lower slips past
+            del self.waiting[best]
             state.slot = self._free.pop()
             state.admit_step = step
-            state.joined_running_batch = running
+            state.joined_running_batch = state.joined_running_batch or running
             self.active[state.slot] = state
             admitted.append(state)
-        self.waiting.extendleft(reversed(not_yet_arrived))
         return admitted
+
+    def requeue(self, slot: int) -> RequestState:
+        """Preempt the request in ``slot``: unbind its row and put it back
+        at the *front* of the waiting queue (it resumes before any
+        equal-priority newcomer). The caller owns KV swap-out/-in."""
+        state = self.active.pop(slot)
+        state.slot = -1
+        state.preemptions += 1
+        self._free.append(slot)
+        self.waiting.appendleft(state)
+        return state
 
     def retire(self, slot: int, reason: str, step: int,
                now: float = 0.0) -> RequestState:

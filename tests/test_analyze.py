@@ -171,6 +171,39 @@ def test_serving_duplicate_tier_groups_and_bad_tier_spec():
     assert "SRV005" in codes(found)
 
 
+def test_serving_shard_divisibility_srv007():
+    graph = trace_site_graph(smoke_lm())
+    # 30 pages / 4 slots over 4 shards: pages don't divide
+    bad = EngineConfig(num_slots=4, num_blocks=30, block_size=16, shards=4)
+    found = check_serving(graph, bad)
+    assert any(f.code == "SRV007" and f.severity == "error" for f in found)
+    # rows don't divide either
+    bad_rows = EngineConfig(num_slots=3, num_blocks=32, block_size=16,
+                            shards=4)
+    assert "SRV007" in codes(check_serving(graph, bad_rows))
+    ok = EngineConfig(num_slots=4, num_blocks=32, block_size=16, shards=4)
+    assert "SRV007" not in codes(check_serving(graph, ok))
+    # advisory mode caps it to a warning like the other structural errors
+    found = check_serving(graph, bad, advisory=True)
+    assert any(f.code == "SRV007" and f.severity == "warning" for f in found)
+
+
+def test_serving_undersized_swap_buffer_srv008():
+    graph = trace_site_graph(smoke_lm())
+    # max_seq=128 / block_size=16 -> 8 pages per max-length request
+    small = EngineConfig(preempt=True, swap_blocks=4)
+    found = check_serving(graph, small)
+    assert any(f.code == "SRV008" and f.severity == "warning" for f in found)
+    # 0 = auto (one full request) and >= one request are both fine
+    assert "SRV008" not in codes(
+        check_serving(graph, EngineConfig(preempt=True)))
+    assert "SRV008" not in codes(
+        check_serving(graph, EngineConfig(preempt=True, swap_blocks=8)))
+    # without preemption the swap buffer is never used
+    assert "SRV008" not in codes(
+        check_serving(graph, EngineConfig(swap_blocks=4)))
+
+
 def test_serving_advisory_mode_caps_severity():
     cfg = dataclasses.replace(smoke_lm(), window=16)
     graph = trace_site_graph(cfg)

@@ -339,6 +339,127 @@ def test_unknown_tier_rejected(served):
 
 
 # ---------------------------------------------------------------------------
+# Async tick loop, report schema, preemption/swap, sharding config
+# ---------------------------------------------------------------------------
+
+def test_scheduler_priority_admission_and_requeue():
+    sched = Scheduler(num_slots=1)
+    sched.submit(Request(prompt=[1], max_new_tokens=2, priority=0))
+    sched.submit(Request(prompt=[2], max_new_tokens=2, priority=5))
+    admitted = sched.admit(step=0)
+    assert [s.request_id for s in admitted] == [1]  # higher priority wins
+    # preemption re-enters at the *front*, ahead of the equal-priority waiter
+    sched.submit(Request(prompt=[3], max_new_tokens=2, priority=0))
+    state = sched.requeue(admitted[0].slot)
+    assert state.preemptions == 1 and state.slot == -1
+    assert [s.request_id for s in sched.waiting][0] == 1
+    assert [s.request_id for s in sched.admit(step=1)] == [1]
+
+
+def test_report_schema_latency_percentiles_and_idle(served):
+    """Satellite: ServeReport's percentile/async/preemption fields are
+    schema-stable — downstream (launch/serve.py, serve_bench.py) reads them
+    by name."""
+    cfg, model, params = served
+    engine = ServeEngine(model, params, EngineConfig(
+        num_slots=2, max_seq=32, block_size=8, prefill_chunk=8))
+    rng = np.random.default_rng(7)
+    requests = [Request(prompt=rng.integers(0, cfg.vocab, size=6).tolist(),
+                        max_new_tokens=5) for _ in range(3)]
+    report = engine.run(requests)
+    for prefix in ("ttft", "latency", "tok_lat"):
+        p50, p95, p99 = (getattr(report, f"{prefix}_p{q}_ms")
+                         for q in (50, 95, 99))
+        assert 0.0 <= p50 <= p95 <= p99
+    assert report.ticks > 0
+    assert report.host_idle_s >= 0.0
+    assert 0.0 <= report.host_idle_frac <= 1.0
+    assert report.preemptions == 0 and report.resumes == 0
+    assert report.shards == 1
+    gaps = sum(len(s.token_gaps_s) for s in report.completed)
+    assert gaps == report.generated_tokens - len(report.completed)
+
+
+def test_sync_tick_loop_token_identical_to_async(served):
+    """overlap=False (the synchronous baseline) runs the same schedule —
+    admission and batch composition — so tokens must match exactly."""
+    cfg, model, params = served
+    rng = np.random.default_rng(11)
+    prompts = [rng.integers(0, cfg.vocab, size=int(n)).tolist()
+               for n in rng.integers(5, 12, size=4)]
+
+    def run(overlap):
+        engine = ServeEngine(model, params, EngineConfig(
+            num_slots=2, max_seq=32, block_size=8, prefill_chunk=8,
+            overlap=overlap))
+        report = engine.run([
+            Request(prompt=p, max_new_tokens=6, arrival_step=i)
+            for i, p in enumerate(prompts)])
+        return report
+
+    fast, base = run(True), run(False)
+    assert ([s.output for s in fast.completed]
+            == [s.output for s in base.completed])
+    assert fast.host_idle_s >= 0.0 and base.host_idle_s >= 0.0
+
+
+def test_preempt_then_resume_token_identical(served):
+    """Under page exhaustion the preempting engine swaps a victim's pages
+    to host and resumes it later; greedy decode must be unaffected."""
+    cfg, model, params = served
+    # 1-block prompts that grow to 3 blocks each against a 4-page pool:
+    # concurrent decode exhausts the pool and forces swaps
+    engine = ServeEngine(model, params, EngineConfig(
+        num_slots=2, max_seq=32, block_size=8, num_blocks=4,
+        prefill_chunk=8, preempt=True))
+    rng = np.random.default_rng(13)
+    prompts = [rng.integers(0, cfg.vocab, size=6).tolist() for _ in range(3)]
+    requests = [Request(prompt=p, max_new_tokens=12) for p in prompts]
+    report = engine.run(requests)
+    assert report.preemptions >= 1 and report.resumes >= 1
+    assert report.resumes == report.preemptions  # everyone came back
+    kinds = {ev["event"] for ev in report.events}
+    assert {"preempt", "resume"} <= kinds
+    assert len(report.completed) == 3
+    assert max(s.preemptions for s in report.completed) >= 1
+    for state in report.completed:
+        expected = _reference_generate(model, params, state.request.prompt,
+                                       12)
+        assert state.output == expected, f"req {state.request_id} diverged"
+
+
+def test_preempt_sustains_higher_concurrency_than_reservation(served):
+    """Acceptance: optimistic admission + swap serves >= 2x the concurrent
+    requests of whole-lifetime reservation from the same pool."""
+    cfg, model, params = served
+    rng = np.random.default_rng(17)
+    prompts = [rng.integers(0, cfg.vocab, size=6).tolist() for _ in range(2)]
+
+    def run(preempt):
+        # each request: 1-block prompt, 3-block lifetime; the 3-page pool
+        # fits only one whole lifetime but two prompts
+        engine = ServeEngine(model, params, EngineConfig(
+            num_slots=2, max_seq=32, block_size=8, num_blocks=3,
+            prefill_chunk=8, preempt=preempt))
+        return engine.run([Request(prompt=p, max_new_tokens=12)
+                           for p in prompts])
+
+    reserved, preempting = run(False), run(True)
+    assert reserved.peak_active_requests == 1
+    assert preempting.peak_active_requests >= 2 * \
+        reserved.peak_active_requests
+    ref = {tuple(s.request.prompt): s.output for s in reserved.completed}
+    for state in preempting.completed:
+        assert state.output == ref[tuple(state.request.prompt)]
+
+
+def test_sharded_engine_requires_matching_mesh(served):
+    cfg, model, params = served
+    with pytest.raises(ValueError, match="no mesh"):
+        ServeEngine(model, params, EngineConfig(num_slots=4, shards=4))
+
+
+# ---------------------------------------------------------------------------
 # Runtime watchdog (shared by train loop + engine)
 # ---------------------------------------------------------------------------
 
