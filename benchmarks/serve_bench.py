@@ -14,9 +14,14 @@ configurations and backs the repo's serving claims:
   host scheduling with the in-flight device step) spends a smaller
   fraction of wall time blocked on device fetches than the synchronous
   baseline (``ServeReport.host_idle_frac``).
+* ``spec_pc3_tr`` / ``spec_pc2_tr`` — the mixed-tier engine with
+  self-speculative decoding (cheap-draft k=3 + one exact batched verify):
+  token-identical to plain, > 1.5 tokens per verify step, accept rate per
+  draft tier.
 * ``multi_device`` — subprocess children at 1 vs 4 virtual CPU devices,
   equal total KV memory: the 4-way tensor-parallel engine (sharded params,
-  KV pages, and decode step) emits identical tokens. The children run f32
+  KV pages, and decode step) emits identical tokens — also with
+  preemption + speculative decoding stacked on top. The children run f32
   compute so the row-parallel psum reorder (~1e-6) stays far below toy
   logit gaps.
 
@@ -39,6 +44,21 @@ TIERS = (("free", "*=pc3_tr"), ("paid", "*/attn/*=exact,*=pc3_tr"))
 
 _MULTIDEV_TIERS = (("free", "*=pc3_tr"), ("paid", "*=exact"))
 
+# claims guarded by ``run.py --check`` against the checked-in
+# BENCH_serve.json (direction = which way is better; "bool" claims must
+# keep holding). Numeric wall-clock rows are deliberately NOT gated — on
+# shared CI machines they are too noisy; the named claims below are the
+# correctness/efficiency properties the serving engine actually promises.
+REGRESSION_CLAIMS = {
+    "paged_tokens_identical_to_slot": "bool",
+    "preempt_tokens_identical_to_reserve": "bool",
+    "spec_tokens_identical_to_plain": "bool",
+    "spec_tokens_per_verify_step_exceeds_1_5": "bool",
+    "spec_pc3_tr_tokens_per_step": "higher",
+    "multi_device_tokens_identical": "bool",
+    "multi_device_spec_preempt_tokens_identical": "bool",
+}
+
 
 def _report_row(name, report, ecfg):
     return {
@@ -60,10 +80,12 @@ def _report_row(name, report, ecfg):
     }
 
 
-def _multidevice_child(devices: int) -> None:
+def _multidevice_child(devices: int, spec: bool = False) -> None:
     """Child mode: serve a fixed mixed-tier Poisson workload on
     ``devices`` virtual CPU devices (sharded when > 1) and print the
-    outputs + report numbers as JSON on stdout."""
+    outputs + report numbers as JSON on stdout. ``spec`` additionally
+    turns on preemption and self-speculative decoding — the full
+    composition (shards x preempt x spec) vs the plain reserve child."""
     os.environ["XLA_FLAGS"] = (
         os.environ.get("XLA_FLAGS", "")
         + f" --xla_force_host_platform_device_count={devices}")
@@ -82,38 +104,54 @@ def _multidevice_child(devices: int) -> None:
     # equal total KV memory across device counts: 16 x 8-token pages
     ecfg = EngineConfig(num_slots=4, max_seq=48, block_size=8,
                         num_blocks=16, prefill_chunk=8,
-                        tiers=_MULTIDEV_TIERS, shards=devices)
+                        tiers=_MULTIDEV_TIERS, shards=devices,
+                        preempt=spec,
+                        spec_draft="*=pc3_tr" if spec else "",
+                        spec_k=3 if spec else 0)
     engine = ServeEngine(model, params, ecfg, mesh=mesh)
     report = engine.run(poisson_requests(
         8, cfg.vocab, rate=0.5, base_prompt=7, base_gen=10, seed=0,
         tiers=[name for name, _ in _MULTIDEV_TIERS]))
+    suffix = "_spec" if spec else ""
     print(json.dumps({
         "devices": devices,
         "shards": report.shards,
+        "spec_steps": report.spec_steps,
+        "spec_tokens_per_step": round(report.spec_tokens_per_step, 3),
+        "preemptions": report.preemptions,
         "outputs": {s.request_id: s.output for s in report.completed},
-        "row": _report_row(f"serve_multidevice_{devices}dev", report, ecfg),
+        "row": _report_row(f"serve_multidevice_{devices}dev{suffix}",
+                           report, ecfg),
     }))
 
 
 def _run_multidevice() -> "tuple[list, dict]":
     rows, outs = [], {}
-    for devices in (1, 4):
+    for devices, spec in ((1, False), (4, False), (4, True)):
         env = dict(os.environ)
-        proc = subprocess.run(
-            [sys.executable, os.path.abspath(__file__),
-             "--multidevice-child", str(devices)],
-            env=env, capture_output=True, text=True, timeout=560)
+        argv = [sys.executable, os.path.abspath(__file__),
+                "--multidevice-child", str(devices)]
+        if spec:
+            argv.append("--multidevice-spec")
+        proc = subprocess.run(argv, env=env, capture_output=True, text=True,
+                              timeout=560)
         if proc.returncode:
             raise RuntimeError(
-                f"multi-device child ({devices} devices) failed:\n"
-                + proc.stderr[-3000:])
+                f"multi-device child ({devices} devices, spec={spec}) "
+                "failed:\n" + proc.stderr[-3000:])
         payload = json.loads(proc.stdout.strip().splitlines()[-1])
         rows.append(payload["row"])
-        outs[devices] = payload
+        outs[(devices, spec)] = payload
     claims = {
-        "multi_device_ran_4_shards": outs[4]["shards"] == 4,
+        "multi_device_ran_4_shards": outs[(4, False)]["shards"] == 4,
         "multi_device_tokens_identical":
-            outs[1]["outputs"] == outs[4]["outputs"],
+            outs[(1, False)]["outputs"] == outs[(4, False)]["outputs"],
+        # the full composition: 4-way sharded + preempting + speculative
+        # decode still matches the 1-device plain reserve engine
+        "multi_device_spec_preempt_tokens_identical":
+            outs[(1, False)]["outputs"] == outs[(4, True)]["outputs"],
+        "multi_device_spec_verify_steps": outs[(4, True)]["spec_steps"],
+        "multi_device_spec_ran": outs[(4, True)]["spec_steps"] >= 1,
     }
     return rows, claims
 
@@ -192,12 +230,38 @@ def run(arch: str = "tinyllama_1_1b", requests: int = 10, rate: float = 0.5,
         reports[label] = report
         rows.append(_report_row(f"serve_{arch}_{label}", report, ecfg))
 
+    # -- self-speculative decoding: cheap draft + exact verify ------------
+    # same mixed-tier engine + workload as "mixed" (the plain baseline),
+    # with two draft tiers: the policy-matched pc3_tr and the cruder
+    # pc2_tr truncation. "free" (= pc3_tr) is its own draft under the
+    # first, so only "paid" speculates there; both groups speculate under
+    # pc2_tr. Greedy verify keeps every variant token-identical to plain.
+    import dataclasses
+
+    spec_labels = []
+    for draft_label, draft in (("pc3_tr", "*=pc3_tr"), ("pc2_tr", "*=pc2_tr")):
+        label = f"spec_{draft_label}"
+        spec_labels.append(label)
+        ecfg = dataclasses.replace(configs[2][1], spec_draft=draft, spec_k=3)
+        report = ServeEngine(model, params, ecfg).run(
+            workload([name for name, _ in TIERS]))
+        reports[label] = report
+        row = _report_row(f"serve_{arch}_{label}", report, ecfg)
+        row.update({
+            "spec_verify_steps": report.spec_steps,
+            "spec_accept_rate": round(report.spec_accept_rate, 3),
+            "spec_tokens_per_step": round(report.spec_tokens_per_step, 3),
+            "spec_disabled_groups": report.spec_disabled_groups,
+            "decode_steps": report.decode_steps,
+        })
+        rows.append(row)
+
     md_rows, md_claims = _run_multidevice()
     rows += md_rows
 
     slot, paged, mixed = reports["slot"], reports["paged"], reports["mixed"]
     outputs = {label: [r.output for r in reports[label].completed]
-               for label in ("slot", "paged", "reserve", "preempt",
+               for label in ("slot", "paged", "mixed", "reserve", "preempt",
                              "async", "sync")}
     claims = {
         "all_requests_complete": all(
@@ -234,6 +298,22 @@ def run(arch: str = "tinyllama_1_1b", requests: int = 10, rate: float = 0.5,
             reports["async"].host_idle_frac < reports["sync"].host_idle_frac,
         "async_host_idle_frac": round(reports["async"].host_idle_frac, 4),
         "sync_host_idle_frac": round(reports["sync"].host_idle_frac, 4),
+        # speculative decoding: greedy verify makes acceptance a pure
+        # correctness check, so identity is claimed against plain mixed
+        "spec_tokens_identical_to_plain": all(
+            [r.output for r in reports[lbl].completed] == outputs["mixed"]
+            for lbl in spec_labels),
+        "spec_tokens_per_verify_step_exceeds_1_5":
+            reports["spec_pc3_tr"].spec_tokens_per_step > 1.5,
+        "spec_pc3_tr_accept_rate":
+            round(reports["spec_pc3_tr"].spec_accept_rate, 3),
+        "spec_pc2_tr_accept_rate":
+            round(reports["spec_pc2_tr"].spec_accept_rate, 3),
+        "spec_pc3_tr_tokens_per_step":
+            round(reports["spec_pc3_tr"].spec_tokens_per_step, 3),
+        "spec_fewer_decode_steps_than_plain":
+            reports["spec_pc3_tr"].decode_steps
+            < reports["mixed"].decode_steps,
         **md_claims,
     }
     return rows, claims
@@ -249,9 +329,11 @@ if __name__ == "__main__":
     p.add_argument("--gen", type=int, default=8)
     p.add_argument("--multidevice-child", type=int, default=0,
                    help=argparse.SUPPRESS)  # internal: subprocess mode
+    p.add_argument("--multidevice-spec", action="store_true",
+                   help=argparse.SUPPRESS)  # internal: spec+preempt child
     args = p.parse_args()
     if args.multidevice_child:
-        _multidevice_child(args.multidevice_child)
+        _multidevice_child(args.multidevice_child, spec=args.multidevice_spec)
         raise SystemExit(0)
     rows, claims = run(arch=args.arch, requests=args.requests,
                        rate=args.rate, max_seq=args.max_seq,

@@ -28,6 +28,7 @@ SRV005   error*    tier policy spec invalid for this model
 SRV006   info      model has no paged decode path; serving checks skipped
 SRV007   error*    KV pages / decode rows not divisible by mesh shards
 SRV008   warning   swap buffer smaller than one max-length request
+SRV009   error*    speculative draft policy incompatible with the target
 =======  ========  ====================================================
 
 ``error*`` codes downgrade to warnings in *advisory* mode (the ``--all``
@@ -365,6 +366,92 @@ def check_serving(graph: SiteGraph, engine_cfg=None, *,
             "pages): a long-running victim cannot be swapped out, so "
             "exhaustion degrades to stalls; raise swap_blocks or leave it "
             "0 (auto: one full request)"))
+    if getattr(engine_cfg, "spec_k", 0):
+        findings += _check_spec_draft(graph, engine_cfg, advisory=advisory)
+    return findings
+
+
+def _check_spec_draft(graph: SiteGraph, engine_cfg, *,
+                      advisory: bool = False) -> List[Finding]:
+    """SRV009: the self-speculative draft policy must be compatible with
+    the verify target. Three ways it can fail:
+
+    * a windowed model — draft steps write K/V ``spec_k`` positions ahead
+      of the committed length, and a rolling ring buffer can wrap those
+      writes onto live history before verify overwrites them;
+    * the draft tier is illegal for the model's compute dtype (LUT backend
+      or flash-attention DAISM variants off bf16) — the draft jit would
+      raise at the first speculative step, long after launch;
+    * the draft policy is not actually cheaper than the target under the
+      analyzer's energy model — speculation then burns more multiply
+      energy per accepted token than plain decode, silently.
+    """
+    from repro.policy import effective_attn_config, energy_per_mult_pj
+
+    findings = []
+    spec = dict(engine_cfg.tiers).get(engine_cfg.spec_draft,
+                                      engine_cfg.spec_draft)
+    try:
+        draft = parse_policy(spec, name="spec-draft")
+    except ValueError as e:
+        return [Finding(
+            "SRV009", _sev(advisory), "serving",
+            f"speculative draft spec '{engine_cfg.spec_draft}' rejected: "
+            f"{e}", site="spec_draft")]
+    if graph.cfg.window:
+        findings.append(Finding(
+            "SRV009", _sev(advisory), "serving",
+            f"speculative decoding (spec_k={engine_cfg.spec_k}) on a "
+            f"windowed model (window={graph.cfg.window}): draft steps "
+            "write K/V ahead of the committed length and a rolling window "
+            "can wrap those writes onto live history; serve with window=0",
+            site="spec_draft"))
+    for where, dcfg in [(f"draft rule {i} ({r.pattern})", r.config)
+                        for i, r in enumerate(draft.rules)] + [
+                            ("draft default", draft.default)]:
+        try:
+            validate_for_dtype(dcfg, graph.cfg.compute_dtype, site=where)
+        except ValueError as e:
+            findings.append(Finding(
+                "SRV009", _sev(advisory), "serving",
+                f"speculative {e}", site="spec_draft"))
+    def _policy_uj(pol) -> float:
+        total = 0.0
+        for s in graph.sites:
+            resolved = pol.resolve(s.path, s.kind)
+            if s.kind is OpKind.ATTN_QK:
+                resolved = effective_attn_config(resolved)
+            total += s.macs * energy_per_mult_pj(resolved, s.dtype)
+        return total * 1e-6
+
+    draft_uj = _policy_uj(draft)
+    draft_key = dataclasses.replace(draft, name="")
+    target_uj, _ = graph.energy_uj()
+    # sums accumulate in different orders; 1e-9 relative slack keeps
+    # "equal energy" (draft == target policy) on the error side
+    if target_uj > 0 and draft_uj >= target_uj * (1 - 1e-9):
+        findings.append(Finding(
+            "SRV009", _sev(advisory), "serving",
+            f"speculative draft policy is not cheaper than the target "
+            f"({draft_uj:.2f} uJ vs {target_uj:.2f} uJ per forward under "
+            "the energy model): every rejected draft token costs more "
+            "than the exact decode it replaces; pick a cheaper draft "
+            "tier or disable speculation", site="spec_draft"))
+    for name, tier_spec in engine_cfg.tiers:
+        try:
+            pol = parse_policy(tier_spec, name=name)
+        except ValueError:
+            continue  # already reported as SRV005
+        if dataclasses.replace(pol, name="") == draft_key:
+            continue  # engine disables speculation for the draft's own group
+        tier_uj = _policy_uj(pol)
+        if tier_uj > 0 and draft_uj >= tier_uj * (1 - 1e-9):
+            findings.append(Finding(
+                "SRV009", "warning", "serving",
+                f"speculative draft is not cheaper than tier '{name}' "
+                f"({draft_uj:.2f} uJ vs {tier_uj:.2f} uJ): that group's "
+                "draft steps cost at least as much as the decode steps "
+                "they try to skip", site="spec_draft"))
     return findings
 
 

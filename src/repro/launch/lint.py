@@ -26,7 +26,8 @@ def _engine_cfg(args):
                         block_size=args.block_size, num_blocks=args.blocks,
                         prefill_chunk=args.prefill_chunk, tiers=tiers,
                         shards=args.shards, preempt=args.preempt,
-                        swap_blocks=args.swap_blocks)
+                        swap_blocks=args.swap_blocks,
+                        spec_draft=args.spec_draft, spec_k=args.spec_k)
 
 
 def _lint_one(name, args, *, advisory):
@@ -77,6 +78,11 @@ def main(argv=None):
                    help="lint with preemption/swap admission enabled")
     p.add_argument("--swap-blocks", type=int, default=0,
                    help="host swap buffer pages (0 = one full request)")
+    p.add_argument("--spec-draft", default="",
+                   help="speculative draft policy: a --tiers name or a raw "
+                        "spec (lints compatibility with the model, SRV009)")
+    p.add_argument("--spec-k", type=int, default=0,
+                   help="draft tokens per speculative verify step")
     args = p.parse_args(argv)
     if bool(args.model) == args.all:
         p.error("exactly one of --model or --all is required")

@@ -83,6 +83,14 @@ def main(argv=None):
     p.add_argument("--swap-blocks", type=int, default=0,
                    help="host swap buffer size in KV pages "
                         "(0 = one full request's worth)")
+    p.add_argument("--spec-draft", default="",
+                   help="self-speculative decoding: draft policy (a --tiers "
+                        "name or a raw policy spec) used for cheap draft "
+                        "steps; the group's own exact step verifies them "
+                        "(greedy outputs stay token-identical)")
+    p.add_argument("--spec-k", type=int, default=0,
+                   help="draft tokens proposed per speculative verify step "
+                        "(0 = speculation off; pair with --spec-draft)")
     p.add_argument("--sync", action="store_true",
                    help="synchronous tick loop (disable the async "
                         "host/device overlap; baseline for "
@@ -124,7 +132,8 @@ def main(argv=None):
         block_size=args.block_size, num_blocks=args.blocks,
         prefill_chunk=args.prefill_chunk, tiers=tiers,
         shards=args.shards, preempt=args.preempt,
-        swap_blocks=args.swap_blocks, overlap=not args.sync)
+        swap_blocks=args.swap_blocks, overlap=not args.sync,
+        spec_draft=args.spec_draft, spec_k=args.spec_k)
     if not args.no_preflight:
         # static lint of the full (model, policy, engine) triple before the
         # (expensive) params init: bad tiers, window/paged conflicts and
@@ -231,6 +240,20 @@ def main(argv=None):
             raise SystemExit("smoke --preempt: a request finished abnormally")
         print(f"SMOKE-OK: {report.preemptions} preemption(s) / "
               f"{report.resumes} resume(s) under page exhaustion")
+    if args.smoke and args.spec_k:
+        if not report.spec_steps:
+            raise SystemExit(
+                "smoke --spec-k workload never took a speculative verify "
+                "step (draft group ineligible or controller disabled it "
+                "before the first step)")
+        if report.spec_tokens_per_step < 1.0:
+            raise SystemExit(
+                "smoke --spec-k: tokens per verify step "
+                f"{report.spec_tokens_per_step:.2f} < 1.0 — the bonus-token "
+                "guarantee is broken")
+        print(f"SMOKE-OK: speculative decoding took {report.spec_steps} "
+              f"verify step(s), accept rate {report.spec_accept_rate:.2f}, "
+              f"{report.spec_tokens_per_step:.2f} tokens/step")
 
 
 if __name__ == "__main__":

@@ -366,8 +366,9 @@ class DecoderLM:
 
     def paged_step(self, params: Params, tokens: jnp.ndarray, cache, *,
                    block_size: int):
-        """One fixed-shape step over block tables — decode (S=1) and chunked
-        prefill (S=chunk) are the same trace family.
+        """One fixed-shape step over block tables — decode (S=1), chunked
+        prefill (S=chunk), and speculative verify (S=spec_k+1, see
+        :meth:`paged_verify_step`) are the same trace family.
 
         tokens (B, S); cache holds the physical pools ``k/v`` from
         :meth:`init_paged_cache` plus per-call row metadata: ``block_tables``
@@ -412,6 +413,38 @@ class DecoderLM:
             x = norm(ctx, "final_ln", x, cfg)
             logits = unembed(ctx, x, cfg)
         return logits, new_lc
+
+    def paged_verify_step(self, params: Params, tokens: jnp.ndarray, cache,
+                          *, block_size: int):
+        """Speculative-decoding verify: one batched :meth:`paged_step` over
+        ``S = k+1`` candidate positions (joining S=1 decode and S=chunk
+        prefill as the third fixed shape of the same trace family).
+
+        ``tokens[:, 0]`` is each row's last *committed* token and
+        ``tokens[:, 1:]`` the ``k`` draft tokens; ``cache``/``block_size``
+        are as in :meth:`paged_step` (``pos`` = the row's committed length,
+        so K/V for the whole candidate window scatters at its true
+        position offsets). Because causal attention at candidate ``j``
+        sees only the in-step K/V of candidates ``<= j`` plus the
+        committed pool, the per-position greedy tokens are exactly what
+        ``k+1`` sequential S=1 decode steps would have produced — the
+        standard accept/reject + bonus-token argument.
+
+        Returns ``(greedy (B, S) per-position argmax, n_acc (B,) accepted
+        draft count = longest prefix with greedy[:, j] == tokens[:, j+1],
+        new {k, v})``. The emitted tokens are ``greedy[:, :n_acc+1]`` (the
+        ``+1`` is the bonus token from the verify logits at the last
+        accepted position); K/V scattered past ``pos + n_acc`` belongs to
+        rejected candidates and must be logically rolled back by the
+        caller (the serving engine truncates the block table and lets the
+        next window overwrite in place).
+        """
+        logits, new_kv = self.paged_step(params, tokens, cache,
+                                         block_size=block_size)
+        greedy = jnp.argmax(logits, -1)                     # (B, S)
+        match = (greedy[:, :-1] == tokens[:, 1:]).astype(jnp.int32)
+        n_acc = jnp.cumprod(match, axis=1).sum(axis=1)      # (B,)
+        return greedy, n_acc, new_kv
 
     # -- cached forward (shared by decode_step / prefill) -------------------
     def _cached_forward(self, params: Params, tokens: jnp.ndarray, cache,

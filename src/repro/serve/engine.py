@@ -46,6 +46,15 @@ Design (PR 1 slot pool -> PR 6 paged pool -> this: sharded + async):
   None = the base model's). Requests are batched *by resolved policy*: one
   scheduler + one jit'd step per group; all groups share the physical page
   pool and the model params.
+* **Self-speculative decoding** — ``spec_draft``/``spec_k`` chain
+  ``spec_k`` S=1 draft steps under a cheap approximate policy (the same
+  weights — DAISM's approximate multiplier is a free weight-sharing draft
+  model) and verify all candidates in one batched S=spec_k+1 step under
+  the group's own policy (``DecoderLM.paged_verify_step``). Greedy
+  accept/reject + bonus token keeps the output token-identical to plain
+  decode; drafted K/V is scratch — the verify overwrites the window in
+  place, the pool truncates pages past the accepted length, and a
+  per-group acceptance EWMA turns speculation off where it doesn't pay.
 * **Accounting** — per-request TTFT / latency, inter-token gap
   percentiles, engine tok/s + step percentiles, KV utilization, peak
   concurrency, prefix-cache hits, preemptions/resumes, host idle time.
@@ -114,6 +123,15 @@ class EngineConfig:
     page reservation to optimistic allocation + swap-out under exhaustion
     (``swap_blocks`` pages of host buffer, 0 = one full request).
     ``overlap=False`` disables the async tick loop (synchronous baseline).
+
+    ``spec_draft`` + ``spec_k`` enable self-speculative decoding: every
+    decode tick drafts ``spec_k`` tokens per row under the (cheap,
+    weight-sharing) ``spec_draft`` policy — a tier name or raw spec — then
+    one batched verify step under the group's own policy accepts the
+    longest matching prefix plus a bonus token (token-identical to plain
+    greedy decode). A per-group EWMA of the draft acceptance rate
+    auto-disables speculation below ``spec_min_accept`` so hostile traffic
+    never pays more than one wasted draft window per group.
     """
 
     num_slots: int = 4          # decode rows per policy group
@@ -127,6 +145,9 @@ class EngineConfig:
     preempt: bool = False       # optimistic admission + swap on exhaustion
     swap_blocks: int = 0        # host swap buffer pages (0 = one request)
     overlap: bool = True        # async tick loop (False = sync baseline)
+    spec_draft: str = ""        # draft policy (tier name | spec; "" = off)
+    spec_k: int = 0             # draft tokens per verify step (0 = off)
+    spec_min_accept: float = 0.25   # EWMA accept floor before auto-disable
 
     def __post_init__(self) -> None:
         # fail at construction with the field named, not as a shape error
@@ -159,6 +180,29 @@ class EngineConfig:
             raise ValueError(
                 f"EngineConfig.prefill_chunk ({self.prefill_chunk}) must be "
                 "a power of two (one compiled prefill shape)")
+        if not isinstance(self.spec_k, int) or self.spec_k < 0:
+            raise ValueError(
+                f"EngineConfig.spec_k must be an int >= 0 "
+                f"(0 = speculation off; got {self.spec_k!r})")
+        if not isinstance(self.spec_draft, str):
+            raise ValueError(
+                "EngineConfig.spec_draft must be a tier name or policy spec "
+                f"string (got {type(self.spec_draft).__name__})")
+        if bool(self.spec_k) != bool(self.spec_draft):
+            raise ValueError(
+                "EngineConfig: spec_draft and spec_k enable speculative "
+                "decoding together — set both (spec_draft=<tier|spec>, "
+                f"spec_k>=1) or neither (got spec_draft={self.spec_draft!r}, "
+                f"spec_k={self.spec_k})")
+        if self.spec_k >= self.max_seq:
+            raise ValueError(
+                f"EngineConfig.spec_k ({self.spec_k}) must be < max_seq "
+                f"({self.max_seq}): the verify window is spec_k+1 positions "
+                "of one request's cache")
+        if not 0.0 <= self.spec_min_accept <= 1.0:
+            raise ValueError(
+                f"EngineConfig.spec_min_accept must be in [0, 1] "
+                f"(got {self.spec_min_accept})")
         if isinstance(self.tiers, dict):  # ergonomics: accept a dict
             object.__setattr__(self, "tiers", tuple(self.tiers.items()))
         for name, spec in self.tiers:
@@ -247,6 +291,13 @@ class ServeReport:
     policy_groups: int         # distinct resolved policies served
     shards: int                # mesh serving-axis size (1 = single device)
     events: List[Dict[str, Any]]
+    # speculative-decoding accounting (all zero when spec is off)
+    spec_steps: int = 0        # batched verify steps launched
+    spec_drafted: int = 0      # draft tokens proposed (rows x spec_k)
+    spec_accepted: int = 0     # drafts accepted by the verify step
+    spec_accept_rate: float = 0.0   # accepted / drafted
+    spec_tokens_per_step: float = 0.0  # emitted per row-verify (incl. bonus)
+    spec_disabled_groups: int = 0  # groups auto-disabled by the EWMA floor
 
     def summary(self) -> str:
         lines = [
@@ -274,14 +325,23 @@ class ServeReport:
             f"{self.joined_mid_stream} request(s) joined the running batch "
             f"mid-stream (continuous batching)",
         ]
+        if self.spec_steps:
+            lines.append(
+                f"speculative: {self.spec_steps} verify step(s), "
+                f"{self.spec_accepted}/{self.spec_drafted} drafts accepted "
+                f"({self.spec_accept_rate * 100:.0f}%), "
+                f"{self.spec_tokens_per_step:.2f} tokens/verify-step"
+                + (f";  {self.spec_disabled_groups} group(s) auto-disabled"
+                   if self.spec_disabled_groups else ""))
         return "\n".join(lines)
 
 
 class _PolicyGroup:
     """One resolved approximation policy: a model rebound to that policy,
-    a scheduler over ``num_slots`` decode rows, one jit'd paged step (two
-    compiled shapes: decode S=1, prefill S=prefill_chunk), and the per-row
-    host-side metadata (block tables, write offsets, last tokens)."""
+    a scheduler over ``num_slots`` decode rows, one jit'd paged step (fixed
+    compiled shapes: decode S=1, prefill S=prefill_chunk, and — when
+    speculation is on — verify S=spec_k+1), and the per-row host-side
+    metadata (block tables, write offsets, last tokens)."""
 
     def __init__(self, label: str, policy: Optional[ApproxPolicy], model,
                  cfg: EngineConfig, donate: bool, sharder=None):
@@ -293,6 +353,12 @@ class _PolicyGroup:
         self.tables = np.full((cfg.num_slots, mb), SENTINEL, np.int32)
         self.last_tok = np.zeros((cfg.num_slots,), np.int32)
         block_size = cfg.block_size
+        # speculative-decode state: eligibility (the engine disables groups
+        # whose policy *is* the draft policy) and the dynamic-k controller's
+        # acceptance EWMA (spec_on drops to False below the floor)
+        self.spec_on = False
+        self.spec_ewma: Optional[float] = None
+        self.spec_obs = 0
 
         def scope():
             if sharder is None:
@@ -313,6 +379,20 @@ class _PolicyGroup:
                 return jnp.argmax(last[:, 0, :], -1), new_kv
 
         self.step_fn = jax.jit(step, donate_argnums=(1,) if donate else ())
+
+        self.verify_fn = None
+        if cfg.spec_k:
+            def verify(params, kv, tokens, tables, pos):
+                # the S=spec_k+1 shape of the same paged-step trace family,
+                # under the *group's own* policy: acceptance is judged
+                # against exactly what plain decode would have emitted
+                with scope():
+                    cache = dict(kv, block_tables=tables, pos=pos)
+                    return model.paged_verify_step(params, tokens, cache,
+                                                   block_size=block_size)
+
+            self.verify_fn = jax.jit(verify,
+                                     donate_argnums=(1,) if donate else ())
 
     @property
     def prefill_rows(self) -> Dict[int, RequestState]:
@@ -335,6 +415,11 @@ class ServeEngine:
     # ticks with active/arrived work but no launches and no admissions
     # before the engine declares a livelock (undersized swap buffer)
     _STUCK_TICKS = 1000
+    # dynamic-k controller: EWMA smoothing of the per-verify acceptance
+    # rate, and how many verify steps to observe before the
+    # ``spec_min_accept`` floor may disable a group's speculation
+    _SPEC_EWMA_ALPHA = 0.4
+    _SPEC_WARMUP = 4
 
     def __init__(self, model, params, cfg: EngineConfig, mesh=None):
         if not hasattr(model, "paged_step"):
@@ -392,6 +477,37 @@ class ServeEngine:
         self.params = params
         self._tiers: Dict[str, ApproxPolicy] = {
             name: parse_policy(spec, name=name) for name, spec in cfg.tiers}
+
+        # self-speculative decoding: one draft model (the engine's weights
+        # rebound to the cheap draft policy) + one jit'd S=1 draft step
+        # shared by every eligible group — the verify step is per-group
+        self._spec_key: Optional[ApproxPolicy] = None
+        self._draft_step = None
+        if cfg.spec_k:
+            draft_policy = self._resolve_policy(cfg.spec_draft)
+            self._spec_key = dataclasses.replace(draft_policy, name="")
+            from repro.models.registry import build_model
+            draft_model = build_model(
+                self.model.cfg.with_policy(draft_policy))
+            self._draft_model = draft_model
+            sharder = self.sharder
+
+            def dscope():
+                if sharder is None:
+                    return contextlib.nullcontext()
+                from repro.parallel.sharding import use_sharder
+                return use_sharder(sharder)
+
+            def draft(params, kv, tokens, tables, pos):
+                with dscope():
+                    cache = dict(kv, block_tables=tables, pos=pos)
+                    logits, new_kv = draft_model.paged_step(
+                        params, tokens, cache, block_size=cfg.block_size)
+                return jnp.argmax(logits[:, 0, :], -1), new_kv
+
+            self._draft_step = jax.jit(
+                draft, donate_argnums=(1,) if self._donate else ())
+
         self.groups: Dict[Optional[ApproxPolicy], _PolicyGroup] = {}
         self._pending_alloc: Dict[int, Tuple[List[int], int]] = {}
         self._next_id = 0
@@ -432,6 +548,13 @@ class ServeEngine:
         self._preemptions = 0
         self._resumes = 0
         self._stuck_ticks = 0
+        # speculative-decoding accounting
+        self._spec_steps = 0       # batched verify launches
+        self._spec_row_steps = 0   # (row, verify) pairs folded back
+        self._spec_drafted = 0
+        self._spec_accepted = 0
+        self._spec_emitted = 0     # tokens emitted by verify (incl. bonus)
+        self._spec_disabled = 0    # groups shut off by the EWMA floor
 
     # -- numerics policy ---------------------------------------------------
 
@@ -466,6 +589,19 @@ class ServeEngine:
             f"Request.policy must be None, a tier name, a spec string, or "
             f"an ApproxPolicy (got {type(policy).__name__})")
 
+    def _spec_eligible(self, key: Optional[ApproxPolicy]) -> bool:
+        """Speculation is per-group: a group whose resolved policy *is* the
+        draft policy would verify with the numerics it drafted with — a
+        pure loss (daism-lint SRV009 flags the engine-wide analogue)."""
+        if self._spec_key is None:
+            return False
+        group_policy = key
+        if group_policy is None:  # base group: the model's own policy
+            group_policy = getattr(self.model.cfg, "approx_policy", None)
+        if group_policy is None:
+            return True
+        return dataclasses.replace(group_policy, name="") != self._spec_key
+
     def _group_for(self, policy: Optional[ApproxPolicy]) -> _PolicyGroup:
         # group key ignores the policy's display name: a tier name and the
         # equivalent raw spec resolve to the same jit'd steps + prefix cache
@@ -482,6 +618,7 @@ class ServeEngine:
                 model = build_model(self.model.cfg.with_policy(policy))
             group = _PolicyGroup(label, key, model, self.cfg, self._donate,
                                  self.sharder)
+            group.spec_on = self._spec_eligible(key)
             self.groups[key] = group
         return group
 
@@ -621,11 +758,24 @@ class ServeEngine:
         self._resumes += 1
         self._event("resume", state, state.slot, blocks=len(table))
 
-    def _ensure_blocks(self, group: _PolicyGroup,
-                       state: RequestState) -> bool:
+    def _ensure_blocks(self, group: _PolicyGroup, state: RequestState,
+                       ahead: int = 0) -> bool:
         """Grow the row's table to cover its next token write (a no-op
         inside the reservation); under preemption, swap victims out on
-        exhaustion. False = the row stalls this tick (no decode step)."""
+        exhaustion. False = the row stalls this tick (no decode step).
+
+        ``ahead`` asks for extra speculative coverage (the draft window
+        past the next write). It is best-effort and never evicts anyone:
+        if the pool can't cover it, the row falls back to plain
+        single-token growth — the verify caps acceptance at whatever
+        coverage the row actually got — and only *that* baseline need may
+        preempt victims."""
+        if ahead:
+            table = self.pool.extend(state.request_id,
+                                     state.seq_len + 1 + ahead)
+            if table is not None:
+                group.tables[state.slot, :len(table)] = table
+                return True
         need = state.seq_len + 1
         table = self.pool.extend(state.request_id, need)
         while table is None and self.cfg.preempt:
@@ -720,6 +870,50 @@ class ServeEngine:
         return {"group": group, "kind": "decode", "rows": rows,
                 "tok": tok, "t0": t0}
 
+    def _launch_spec(self, group: _PolicyGroup,
+                     stalled: Set[int]) -> Optional[dict]:
+        """Speculative decode for ``group``'s generating rows: chain
+        ``spec_k`` S=1 draft steps (draft-policy model, same pages — the
+        drafted K/V is scratch the verify step overwrites in place), then
+        launch the batched S=spec_k+1 verify under the group's own policy.
+        All ``spec_k + 1`` dispatches go out without a host sync; the
+        accept/reject fold happens at apply time from one fetched
+        ``(greedy, n_acc)`` pair.
+
+        Each row's acceptance is capped by its actual page coverage
+        (``caps``): when the speculative ``extend`` failed, candidate
+        positions past the mapped pages saw dropped writes/garbage reads,
+        so only the in-coverage prefix — whose attention window is fully
+        mapped — is trusted. Positions ``<= cap`` attend only mapped,
+        exactly-written K/V, so the accepted tokens are exact."""
+        rows = {s: st for s, st in group.decode_rows.items()
+                if st.request_id not in stalled}
+        if not rows:
+            return None
+        cfg = self.cfg
+        r = cfg.num_slots
+        tables = np.full_like(group.tables, SENTINEL)
+        pos = np.zeros((r,), np.int32)
+        caps: Dict[int, int] = {}
+        for slot, state in rows.items():
+            tables[slot] = group.tables[slot]
+            pos[slot] = state.seq_len  # write offset of the candidate window
+            cov = int((group.tables[slot] != SENTINEL).sum()) * cfg.block_size
+            caps[slot] = max(0, cov - 1 - state.seq_len)
+        t0 = time.perf_counter()
+        jt = jnp.asarray(tables)
+        kv = self.kv
+        toks = [jnp.asarray(group.last_tok)]
+        for j in range(cfg.spec_k):
+            nxt, kv = self._draft_step(self.params, kv, toks[-1][:, None],
+                                       jt, jnp.asarray(pos + j))
+            toks.append(nxt)
+        cand = jnp.stack(toks, axis=1)  # (R, spec_k+1) candidate window
+        greedy, n_acc, self.kv = group.verify_fn(self.params, kv, cand, jt,
+                                                 jnp.asarray(pos))
+        return {"group": group, "kind": "spec", "rows": rows, "tok": greedy,
+                "n_acc": n_acc, "caps": caps, "t0": t0}
+
     def _fetch(self, rec: dict):
         """Block on a launched step's token array — the only host wait in
         the loop; the blocked time is the tick's idle accounting."""
@@ -727,6 +921,8 @@ class ServeEngine:
             return
         t0 = time.perf_counter()
         rec["np_tok"] = np.asarray(rec["tok"])
+        if "n_acc" in rec:
+            rec["np_acc"] = np.asarray(rec["n_acc"])
         t1 = time.perf_counter()
         self._idle_s += t1 - t0
         rec["dt"] = t1 - rec["t0"]
@@ -746,6 +942,43 @@ class ServeEngine:
                     self._append_token(group, state, int(tok[slot]))
                 if state.request_id in self.pool:
                     self.pool.advance(state.request_id, state.seq_len)
+        elif rec["kind"] == "spec":
+            self._step_times.append(dt)
+            self.watchdog.observe(dt)
+            k = self.cfg.spec_k
+            rates = []
+            self._spec_steps += 1
+            for slot, state in list(rows.items()):
+                greedy = tok[slot]
+                raw = int(rec["np_acc"][slot])      # draft-quality signal
+                n_acc = min(raw, rec["caps"][slot])  # coverage-capped
+                emitted = 0
+                for j in range(n_acc + 1):
+                    self._append_token(group, state, int(greedy[j]))
+                    emitted += 1
+                    if state.slot < 0:  # retired (eos / length): exact
+                        break           # decode would have stopped here too
+                self._spec_row_steps += 1
+                self._spec_drafted += k
+                self._spec_accepted += emitted - 1
+                self._spec_emitted += emitted
+                state.spec_drafted += k
+                state.spec_accepted += emitted - 1
+                rates.append(min(raw, k) / k)
+                if state.request_id in self.pool:
+                    self.pool.advance(state.request_id, state.seq_len)
+                    if self.cfg.preempt:
+                        # roll the speculative reservation back: pages
+                        # covering only rejected positions return to the
+                        # pool; the partially-kept page's stale cells are
+                        # overwritten by the next window
+                        freed = self.pool.truncate(state.request_id,
+                                                   state.seq_len)
+                        if freed:
+                            row = group.tables[state.slot]
+                            mapped = int((row != SENTINEL).sum())
+                            row[mapped - freed:] = SENTINEL
+            self._update_spec_controller(group, rates)
         else:
             self._step_times.append(dt)
             self.watchdog.observe(dt)
@@ -753,6 +986,29 @@ class ServeEngine:
                 self._append_token(group, state, int(tok[slot]))
                 if state.request_id in self.pool:
                     self.pool.advance(state.request_id, state.seq_len)
+
+    def _update_spec_controller(self, group: _PolicyGroup,
+                                rates: List[float]):
+        """Dynamic-k controller: EWMA the verify acceptance rate and shut a
+        group's speculation off (``spec_k -> 0``, plain decode) once the
+        warmed-up average sinks below ``spec_min_accept`` — worst-case
+        traffic pays a bounded number of wasted draft windows, then plain
+        decode speed. Token identity never depends on the controller: a
+        disabled group just takes the S=1 path."""
+        if not rates:
+            return
+        rate = float(np.mean(rates))
+        a = self._SPEC_EWMA_ALPHA
+        group.spec_ewma = (rate if group.spec_ewma is None
+                           else a * rate + (1 - a) * group.spec_ewma)
+        group.spec_obs += 1
+        if (group.spec_obs >= self._SPEC_WARMUP
+                and group.spec_ewma < self.cfg.spec_min_accept):
+            group.spec_on = False
+            self._spec_disabled += 1
+            self.events.append(dict(
+                step=self.step, event="spec_off", request_id=-1, slot=-1,
+                group=group.label, ewma=round(group.spec_ewma, 3)))
 
     # -- tick loop -----------------------------------------------------------
 
@@ -800,10 +1056,16 @@ class ServeEngine:
             return False
         stalled: Set[int] = set()
         for group in self.groups.values():
+            # speculative rows want spec_k extra positions of coverage, but
+            # only in preempt mode (on-demand growth + truncate rollback);
+            # a whole-lifetime reservation already covers every position
+            # acceptance can reach, so reserve mode never over-allocates
+            ahead = (self.cfg.spec_k
+                     if group.spec_on and self.cfg.preempt else 0)
             for _slot, state in list(group.decode_rows.items()):
                 if state.request_id not in self.pool:
                     continue  # preempted as a victim earlier this phase
-                if not self._ensure_blocks(group, state):
+                if not self._ensure_blocks(group, state, ahead=ahead):
                     stalled.add(state.request_id)
         inflight = []
         for group in self.groups.values():
@@ -813,7 +1075,8 @@ class ServeEngine:
                 if not self.cfg.overlap:
                     self._fetch(rec)
         for group in self.groups.values():
-            rec = self._launch_decode(group, stalled)
+            rec = (self._launch_spec(group, stalled) if group.spec_on
+                   else self._launch_decode(group, stalled))
             if rec is not None:
                 inflight.append(rec)
                 if not self.cfg.overlap:
@@ -906,4 +1169,12 @@ class ServeEngine:
             policy_groups=len(self.groups),
             shards=self.shards,
             events=self.events,
+            spec_steps=self._spec_steps,
+            spec_drafted=self._spec_drafted,
+            spec_accepted=self._spec_accepted,
+            spec_accept_rate=(self._spec_accepted / self._spec_drafted
+                              if self._spec_drafted else 0.0),
+            spec_tokens_per_step=(self._spec_emitted / self._spec_row_steps
+                                  if self._spec_row_steps else 0.0),
+            spec_disabled_groups=self._spec_disabled,
         )

@@ -29,9 +29,16 @@ list of block ids — its block table — covering its logical positions
   uses to demonstrate the paged pool's memory win over the slot pool
   (a slot pool is the degenerate ``block_size == max_seq`` configuration).
 
+* **Speculative rollback** — speculative decoding writes ``k`` draft
+  positions ahead of a sequence's committed length and may keep only a
+  prefix of them; ``truncate`` rolls the reservation back, freeing pages
+  that cover *only* rejected positions while leaving partially-kept pages
+  (their stale cells are overwritten in place by the next decode window).
+
 Writes never need copy-on-write: only *full, committed prompt* blocks are
 shared, and no request ever writes at a logical position inside its
-(committed) prompt prefix again — decode appends strictly after it.
+(committed) prompt prefix again — decode and speculative drafts append
+strictly after it (``truncate`` also refuses to cut into prompt pages).
 """
 from __future__ import annotations
 
@@ -194,6 +201,39 @@ class BlockPool:
         """Record that ``live_len`` logical positions now hold real K/V
         (utilization accounting only; no allocation happens here)."""
         self._seqs[seq_id].live_len = live_len
+
+    def truncate(self, seq_id: Hashable, keep_len: int) -> int:
+        """Logically truncate a sequence to ``keep_len`` positions, freeing
+        trailing pages past the kept region (speculative-decode rollback).
+
+        ``extend``-ed pages that ended up covering only *rejected* draft
+        positions return to the pool immediately; a partially-kept trailing
+        page stays (its rejected cells are overwritten in place by the next
+        decode/verify window — attention never reads past the row's write
+        position, so stale K/V there is inert). Pages covering the prompt
+        are never cut: shared committed prefix blocks keep their refcounts
+        and later speculation can never invalidate a prefix-cache hit.
+        Returns the number of pages released."""
+        seq = self._seqs[seq_id]
+        if keep_len < 0:
+            raise ValueError(f"keep_len must be >= 0 (got {keep_len})")
+        keep_blocks = max(blocks_needed(keep_len, self.block_size),
+                          blocks_needed(len(seq.prompt), self.block_size))
+        freed = 0
+        while len(seq.blocks) > keep_blocks:
+            bid = seq.blocks.pop()
+            self._ref[bid] -= 1
+            if self._ref[bid] == 0:
+                del self._ref[bid]
+                if bid in self._block_key:
+                    self._evictable[bid] = None
+                else:
+                    self._free.append(bid)
+            freed += 1
+        cover = len(seq.blocks) * self.block_size
+        seq.total_len = max(min(seq.total_len, cover), 1)
+        seq.live_len = min(seq.live_len, max(keep_len, seq.cached_len))
+        return freed
 
     def commit_prefix(self, seq_id: Hashable) -> int:
         """Publish the sequence's full prompt blocks into the prefix cache

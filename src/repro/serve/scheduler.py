@@ -83,6 +83,11 @@ class RequestState:
     # host-side K/V snapshot + table length while the request is evicted
     preemptions: int = 0
     swap: Optional[dict] = None
+    # speculative-decoding accounting (engine-owned): draft tokens proposed
+    # for this request and how many of them the verify step accepted —
+    # per-request acceptance feeds the engine's dynamic-k controller
+    spec_drafted: int = 0
+    spec_accepted: int = 0
 
     @property
     def ttft_s(self) -> float:

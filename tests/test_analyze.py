@@ -219,6 +219,63 @@ def test_serving_skipped_for_non_servable_family():
     assert all(f.severity == "info" for f in found)
 
 
+def test_serving_spec_draft_srv009():
+    """SRV009: speculative draft vs target compatibility — energy, dtype,
+    window, spec parse; silent when the draft is genuinely cheaper."""
+    graph = trace_site_graph(smoke_lm())  # target: exact base policy
+
+    def srv9(ecfg, **kw):
+        return [f for f in check_serving(graph, ecfg, **kw)
+                if f.code == "SRV009"]
+
+    # a genuinely cheaper draft is clean
+    ok = EngineConfig(spec_draft="*=pc3_tr", spec_k=3)
+    assert srv9(ok) == []
+    # ... and spec_k=0 never runs the checker at all
+    assert srv9(EngineConfig()) == []
+
+    # draft == target numerics: speculation can never pay for itself
+    found = srv9(EngineConfig(spec_draft="*=exact", spec_k=3))
+    assert [f.severity for f in found] == ["error"]
+    assert "not cheaper" in found[0].message
+
+    # draft names a registered tier (resolved through EngineConfig.tiers)
+    named = EngineConfig(tiers=(("cheap", "*=pc3_tr"),),
+                         spec_draft="cheap", spec_k=3)
+    assert srv9(named) == []
+
+    # draft not cheaper than another tier: warning, not error
+    found = srv9(EngineConfig(tiers=(("cheap", "*=pc3_tr"),),
+                              spec_draft="*=pc2", spec_k=3))
+    assert any(f.severity == "warning" and "tier 'cheap'" in f.message
+               for f in found)
+
+    # unparseable draft spec
+    found = srv9(EngineConfig(spec_draft="*=bogus", spec_k=3))
+    assert [f.severity for f in found] == ["error"]
+    assert "rejected" in found[0].message
+
+    # windowed model: draft writes ahead of the committed length
+    wg = trace_site_graph(dataclasses.replace(smoke_lm(), window=16))
+    found = [f for f in check_serving(wg, ok) if f.code == "SRV009"]
+    assert any("window" in f.message and f.severity == "error"
+               for f in found)
+
+    # dtype illegality: LUT draft on an f32 model
+    f32 = dataclasses.replace(smoke_lm(), compute_dtype="float32",
+                              param_dtype="float32")
+    fg = trace_site_graph(f32)
+    found = [f for f in check_serving(
+        fg, EngineConfig(spec_draft="*=pc3_tr:lut", spec_k=3))
+        if f.code == "SRV009"]
+    assert any(f.severity == "error" for f in found)
+
+    # advisory mode downgrades the structural errors to warnings
+    found = srv9(EngineConfig(spec_draft="*=exact", spec_k=3),
+                 advisory=True)
+    assert found and all(f.severity == "warning" for f in found)
+
+
 def test_engine_config_finding_wraps_construction_error():
     try:
         EngineConfig(tiers=(("free",),))  # malformed pair

@@ -137,3 +137,112 @@ def test_invalid_construction():
         BlockPool(0, 4)
     with pytest.raises(ValueError, match="block_size"):
         BlockPool(4, 0)
+
+
+# -- speculative rollback (truncate) ----------------------------------------
+
+
+def test_truncate_frees_wholly_rejected_pages():
+    pool = BlockPool(num_blocks=6, block_size=4)
+    pool.allocate("a", [1, 2, 3], total_len=4)          # 1 page
+    assert len(pool.extend("a", 12)) == 3               # spec lookahead
+    # verify kept only up to position 5: page 3 covers [8,12) = all
+    # rejected -> freed; page 2 covers [4,8) = partially kept -> stays
+    assert pool.truncate("a", 6) == 1
+    assert pool.blocks_in_use == 2 and pool.blocks_available == 4
+    assert pool.truncate("a", 6) == 0                   # idempotent
+    pool.free("a")
+    assert pool.blocks_in_use == 0
+
+
+def test_truncate_partial_page_kept_and_regrowable():
+    pool = BlockPool(num_blocks=4, block_size=4)
+    pool.allocate("a", [1, 2], total_len=2)
+    pool.extend("a", 10)                                # 3 pages
+    assert pool.truncate("a", 3) == 2                   # back to 1 page
+    # the sequence can speculate again from the rolled-back state
+    assert len(pool.extend("a", 10)) == 3
+    pool.free("a")
+    assert pool.blocks_available == 4
+
+
+def test_truncate_never_cuts_prompt_or_shared_prefix():
+    pool = BlockPool(num_blocks=8, block_size=4)
+    prompt = list(range(10))                            # 3 pages
+    pool.allocate("a", prompt, total_len=12, policy_key="p")
+    pool.commit_prefix("a")
+    t_b, cached = pool.allocate("b", prompt, total_len=12, policy_key="p")
+    assert cached == 8                                  # 2 shared pages
+    # keep_len 0 still may not release pages under b's prompt
+    assert pool.truncate("b", 0) == 0
+    assert len(pool.extend("b", 12)) == 3               # table regrowable
+    pool.free("a")
+    pool.free("b")
+    # shared pages survived both lifecycles: next identical prompt hits
+    _, cached = pool.allocate("c", prompt, total_len=12, policy_key="p")
+    assert cached == 8
+
+
+def test_truncate_negative_keep_len_raises():
+    pool = BlockPool(num_blocks=2, block_size=4)
+    pool.allocate("a", [1], total_len=2)
+    with pytest.raises(ValueError, match="keep_len"):
+        pool.truncate("a", -1)
+
+
+def test_truncate_interleaved_with_preempt_swap_leaks_no_pages():
+    """Property-style sweep: random interleavings of speculative extend ->
+    partial-accept truncate -> preempt (free) -> resume (re-allocate) must
+    keep the pool's page accounting exact — every page is free, evictable,
+    or owned, after every operation — and drain to an empty pool."""
+    import random
+
+    rng = random.Random(7)
+    for trial in range(30):
+        num_blocks = rng.randint(4, 12)
+        block_size = rng.choice([2, 4, 8])
+        pool = BlockPool(num_blocks=num_blocks, block_size=block_size)
+        live = {}    # seq_id -> committed length (what a scheduler tracks)
+        prompts = {}
+        next_id = 0
+        for _ in range(60):
+            s = pool.stats()
+            assert (s["blocks_free"] + s["blocks_evictable"]
+                    + s["blocks_in_use"] == num_blocks), (trial, s)
+            op = rng.choice(["admit", "spec", "accept", "preempt", "retire"])
+            if op == "admit":
+                sid = f"t{trial}_s{next_id}"
+                prompt = [rng.randrange(64) for _ in
+                          range(rng.randint(1, 2 * block_size))]
+                total = len(prompt) + rng.randint(1, 2 * block_size)
+                if pool.allocate(sid, prompt, total,
+                                 policy_key=sid) is not None:
+                    next_id += 1
+                    prompts[sid] = prompt
+                    live[sid] = len(prompt)
+                    pool.commit_prefix(sid)
+            elif op == "spec" and live:
+                sid = rng.choice(sorted(live))
+                k = rng.randint(1, block_size)  # draft lookahead
+                pool.extend(sid, live[sid] + 1 + k)  # None = best-effort miss
+            elif op == "accept" and live:
+                sid = rng.choice(sorted(live))
+                live[sid] += rng.randint(0, block_size)  # n_acc + bonus
+                pool.truncate(sid, live[sid])
+            elif op == "preempt" and live:
+                sid = rng.choice(sorted(live))
+                pool.free(sid)  # K/V swapped to host by the engine
+                # resume immediately if pages allow, else drop the request
+                if pool.allocate(sid, prompts[sid],
+                                 max(live[sid], len(prompts[sid]) + 1),
+                                 policy_key=sid) is None:
+                    del live[sid], prompts[sid]
+            elif op == "retire" and live:
+                sid = rng.choice(sorted(live))
+                pool.free(sid)
+                del live[sid], prompts[sid]
+        for sid in sorted(live):
+            pool.free(sid)
+        assert pool.blocks_in_use == 0, trial
+        assert pool.stats()["blocks_free"] \
+            + pool.stats()["blocks_evictable"] == num_blocks

@@ -14,7 +14,7 @@ from repro.configs import get_config
 from repro.models.registry import build_model
 from repro.runtime.watchdog import StepWatchdog
 from repro.serve import (EngineConfig, Request, Scheduler, ServeEngine,
-                         synthetic_requests)
+                         poisson_requests, synthetic_requests)
 
 MAX_SEQ = 48
 
@@ -482,3 +482,157 @@ def test_engine_config_rejects_windowed_model(served):
         EngineConfig().validate_for_model(windowed)
     with pytest.raises(ValueError, match=r"ArchConfig\.window"):
         ServeEngine(build_model(windowed), params, EngineConfig(num_slots=1))
+
+
+# ---------------------------------------------------------------------------
+# Self-speculative decoding (draft with the approximate policy, verify exact)
+# ---------------------------------------------------------------------------
+
+SPEC_DRAFT = "*=pc3_tr"
+
+
+def test_spec_config_validation():
+    with pytest.raises(ValueError, match="spec_k"):
+        EngineConfig(spec_k=2)                    # draft policy missing
+    with pytest.raises(ValueError, match="spec_draft"):
+        EngineConfig(spec_draft=SPEC_DRAFT)       # k missing
+    with pytest.raises(ValueError, match="spec_k"):
+        EngineConfig(spec_k=-1, spec_draft=SPEC_DRAFT)
+    with pytest.raises(ValueError, match="spec_k"):
+        EngineConfig(max_seq=16, block_size=16, spec_k=16,
+                     spec_draft=SPEC_DRAFT)       # k >= max_seq
+    with pytest.raises(ValueError, match="spec_min_accept"):
+        EngineConfig(spec_k=2, spec_draft=SPEC_DRAFT, spec_min_accept=1.5)
+    ok = EngineConfig(spec_k=3, spec_draft=SPEC_DRAFT)
+    assert ok.spec_k == 3
+
+
+def test_paged_verify_step_accept_and_bonus_semantics(served):
+    """paged_verify_step against the sequential S=1 oracle: correct drafts
+    are accepted up to the first mismatch, and the verify logits at the
+    last accepted position supply the bonus token."""
+    cfg, model, params = served
+    block_size, num_blocks = 8, 4
+    rng = np.random.default_rng(23)
+    prompt = rng.integers(0, cfg.vocab, size=6).tolist()
+    table = jnp.arange(num_blocks, dtype=jnp.int32)[None, :]
+
+    def fresh_prefill():
+        kv = model.init_paged_cache(num_blocks, block_size)
+        cache = dict(kv, block_tables=table, pos=jnp.zeros(1, jnp.int32))
+        logits, kv = model.paged_step(
+            params, jnp.asarray([prompt], jnp.int32), cache,
+            block_size=block_size)
+        return int(jnp.argmax(logits[0, -1])), kv
+
+    # sequential oracle: t1 from prefill, then three S=1 decode steps
+    t1, kv = fresh_prefill()
+    toks = [t1]
+    for j in range(3):
+        cache = dict(kv, block_tables=table,
+                     pos=jnp.asarray([len(prompt) + j], jnp.int32))
+        logits, kv = model.paged_step(
+            params, jnp.asarray([[toks[-1]]], jnp.int32), cache,
+            block_size=block_size)
+        toks.append(int(jnp.argmax(logits[0, 0])))
+    t1, t2, t3, t4 = toks
+
+    def verify(drafts):
+        _, kv = fresh_prefill()
+        cache = dict(kv, block_tables=table,
+                     pos=jnp.asarray([len(prompt)], jnp.int32))
+        greedy, n_acc, _ = model.paged_verify_step(
+            params, jnp.asarray([[t1] + drafts, ], jnp.int32), cache,
+            block_size=block_size)
+        return [int(t) for t in greedy[0]], int(n_acc[0])
+
+    wrong = (t4 + 1) % cfg.vocab
+    greedy, n_acc = verify([t2, t3, wrong])
+    assert greedy[:3] == [t2, t3, t4]  # per-position argmax == sequential
+    assert n_acc == 2                  # third draft rejected
+    # emitted = accepted drafts + the bonus token from the verify logits
+    assert greedy[:n_acc + 1] == [t2, t3, t4]
+
+    _, n_acc = verify([t2, t3, t4])
+    assert n_acc == 3                  # perfect drafts: all accepted
+    _, n_acc = verify([(t2 + 1) % cfg.vocab, t3, t4])
+    assert n_acc == 0                  # first mismatch gates the rest
+
+
+def test_spec_decode_token_identical_mixed_tiers(served):
+    """Acceptance: speculative decode under mixed-tier Poisson traffic is
+    token-identical to plain decode, and the draft tier's own group is
+    ineligible (it would verify with the numerics it drafted with)."""
+    cfg, model, params = served
+    tiers = (("free", SPEC_DRAFT), ("paid", MIXED_SPEC))
+
+    def run(spec):
+        ecfg = EngineConfig(
+            num_slots=4, max_seq=MAX_SEQ, block_size=8, prefill_chunk=8,
+            tiers=tiers,
+            spec_draft=SPEC_DRAFT if spec else "", spec_k=3 if spec else 0)
+        engine = ServeEngine(model, params, ecfg)
+        report = engine.run(poisson_requests(
+            8, cfg.vocab, rate=0.5, base_prompt=7, base_gen=10, seed=0,
+            tiers=["free", "paid"]))
+        return engine, report
+
+    _, plain = run(False)
+    engine, spec = run(True)
+    assert ([s.output for s in spec.completed]
+            == [s.output for s in plain.completed])
+    assert spec.spec_steps >= 1
+    assert 0.0 <= spec.spec_accept_rate <= 1.0
+    assert spec.spec_tokens_per_step >= 1.0  # bonus token floor
+    # the free tier resolves to the draft policy: that group never drafts
+    by_key = {g.label: g.spec_on for g in engine.groups.values()}
+    assert by_key["free"] is False
+    assert any(s.spec_drafted > 0 for s in spec.completed)
+    for s in spec.completed:
+        assert 0 <= s.spec_accepted <= s.spec_drafted
+
+
+def test_spec_decode_with_preemption_rolls_back_and_drains(served):
+    """Speculation + preemption: rejected-draft pages are truncated back to
+    the pool, preempted rows resume, tokens stay identical to the plain
+    reserve engine, and the pool drains to zero pages in use."""
+    cfg, model, params = served
+    rng = np.random.default_rng(21)
+    prompts = [rng.integers(0, cfg.vocab, size=6).tolist() for _ in range(4)]
+
+    def burst():
+        return [Request(prompt=p, max_new_tokens=18) for p in prompts]
+
+    ref = ServeEngine(model, params, EngineConfig(
+        num_slots=4, max_seq=32, block_size=8, num_blocks=4,
+        prefill_chunk=8)).run(burst())
+    engine = ServeEngine(model, params, EngineConfig(
+        num_slots=4, max_seq=32, block_size=8, num_blocks=4,
+        prefill_chunk=8, preempt=True, spec_draft=SPEC_DRAFT, spec_k=3))
+    report = engine.run(burst())
+    assert report.preemptions >= 1 and report.resumes == report.preemptions
+    assert report.spec_steps >= 1
+    assert ([s.output for s in report.completed]
+            == [s.output for s in ref.completed])
+    stats = engine.pool.stats()
+    assert stats["blocks_in_use"] == 0  # no leaked speculative pages
+
+
+def test_spec_controller_disables_low_acceptance_group(served):
+    """The EWMA controller shuts a group's speculation off after the warmup
+    once acceptance sinks below spec_min_accept, emitting a spec_off
+    event; identity never depended on it (the group just runs S=1)."""
+    cfg, model, params = served
+    engine = ServeEngine(model, params, EngineConfig(
+        num_slots=2, max_seq=MAX_SEQ, spec_draft=SPEC_DRAFT, spec_k=3,
+        spec_min_accept=0.9))
+    group = engine._group_for(None)
+    assert group.spec_on
+    for _ in range(engine._SPEC_WARMUP):
+        engine._update_spec_controller(group, [0.0, 0.1])
+    assert group.spec_on is False
+    offs = [ev for ev in engine.events if ev["event"] == "spec_off"]
+    assert len(offs) == 1 and offs[0]["group"] == group.label
+    # permanent for the run: further observations don't resurrect it
+    engine._update_spec_controller(group, [1.0])
+    assert group.spec_on is False

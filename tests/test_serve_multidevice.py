@@ -6,7 +6,10 @@ pytest process keeps the default single-device environment). Two claims:
 * mixed-tier Poisson traffic served by the 4-shard engine is
   token-identical to the single-device engine (same EngineConfig), and
 * a preempt/swap/resume cycle on the sharded engine is token-identical too
-  — the page gather/scatter swap path crosses shards without corruption.
+  — the page gather/scatter swap path crosses shards without corruption, and
+* the full composition — 4-way sharded + preempting + self-speculative
+  decode (cheap draft, exact batched verify) — still matches the plain
+  single-device reserve engine token-for-token.
 
 The smoke model runs f32 compute: the row-parallel output projections
 psum partial sums in a different order per mesh size, which at bf16
@@ -91,6 +94,37 @@ _PREEMPT = _COMMON + textwrap.dedent("""
     print("SHARDED-PREEMPT-OK", rep.preemptions, rep.resumes)
 """)
 
+_SPEC = _COMMON + textwrap.dedent("""
+    reqs = poisson_requests(6, cfg.vocab, rate=1.0, base_prompt=7,
+                            base_gen=14, seed=1, tiers=["free", "paid"])
+    def fresh():
+        return [Request(prompt=r.prompt, max_new_tokens=r.max_new_tokens,
+                        arrival_step=r.arrival_step, policy=r.policy)
+                for r in reqs]
+    base = ServeEngine(model, params, EngineConfig(
+        num_slots=4, max_seq=48, block_size=8, prefill_chunk=8,
+        tiers=TIERS))
+    ref = outputs(base.run(fresh()))
+
+    mesh = jax.make_mesh((4,), ("model",))
+    # sharded + preempting + speculative: the draft chain, batched verify,
+    # page rollback, and swap path all cross the 4-way mesh together
+    eng = ServeEngine(model, params, EngineConfig(
+        num_slots=4, max_seq=48, block_size=8, num_blocks=8,
+        prefill_chunk=8, tiers=TIERS, shards=4, preempt=True,
+        spec_draft="*=pc3_tr", spec_k=3), mesh=mesh)
+    rep = eng.run(fresh())
+    assert rep.shards == 4, rep.shards
+    assert rep.spec_steps >= 1, "speculation never ran"
+    assert rep.preemptions >= 1, "pool never exhausted; shrink it"
+    got = outputs(rep)
+    assert got == ref, {k: (got[k], ref[k]) for k in got if got[k] != ref[k]}
+    stats = eng.pool.stats()
+    assert stats["blocks_in_use"] == 0, stats
+    print("SHARDED-SPEC-PREEMPT-OK", rep.spec_steps,
+          round(rep.spec_tokens_per_step, 2))
+""")
+
 _MISMATCH = _COMMON + textwrap.dedent("""
     mesh = jax.make_mesh((4,), ("model",))
     try:
@@ -121,6 +155,12 @@ def test_sharded_engine_token_identical_mixed_tier_poisson():
 def test_sharded_engine_preempt_resume_token_identical():
     out = _run(_PREEMPT)
     assert "SHARDED-PREEMPT-OK" in out.stdout, out.stderr[-3000:]
+
+
+@pytest.mark.slow
+def test_sharded_engine_spec_preempt_token_identical():
+    out = _run(_SPEC)
+    assert "SHARDED-SPEC-PREEMPT-OK" in out.stdout, out.stderr[-3000:]
 
 
 @pytest.mark.slow
